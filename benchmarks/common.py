@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: result directory, markdown emission."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save(name: str, payload: dict, lines: list[str]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    md = "\n".join(lines) + "\n"
+    with open(os.path.join(RESULTS_DIR, name + ".md"), "w") as f:
+        f.write(md)
+    return md
+
+
+def table(headers: list[str], rows: list[list]) -> list[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "---|" * len(headers)]
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{v:.3f}" if isinstance(v, float) else str(v) for v in r) + " |")
+    return out

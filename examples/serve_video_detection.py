@@ -1,0 +1,76 @@
+"""The paper's experiment, literally: video object detection split among
+CPU-pinned containers.
+
+A synthetic video (independent frames) is processed by a YOLOv4-tiny-shaped
+detector. The workload is split into n equal segments; n OS processes
+("containers") are pinned to disjoint CPU-core sets (the in-process
+equivalent of ``docker run --cpus``) and run simultaneously; outputs are
+recombined in frame order. Real wall times; energy from the activity model
+(no power sensor on this host — constants in core/testbed.py).
+
+Finally the DivideAndSave scheduler consumes the observations and picks the
+optimal container count online (paper §VII's proposed application).
+
+    PYTHONPATH=src python examples/serve_video_detection.py \
+        --frames 240 --cores 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import testbed
+from repro.core.energy_model import fit_best
+from repro.core.scheduler import DivideAndSaveScheduler
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=240)
+    ap.add_argument("--cores", type=int, default=8)
+    ap.add_argument("--counts", type=int, nargs="*",
+                    default=[1, 2, 3, 4, 6, 8])
+    args = ap.parse_args()
+
+    frames = testbed.make_video(args.frames)
+    print(f"video: {args.frames} frames {frames.shape[1:]}  "
+          f"device: {args.cores} cores\n")
+    base = None
+    observations = []
+    print("  n  cores/ctr   wall (s)   power (W)   energy (J)   "
+          "t/t1    E/E1   outputs")
+    for n in args.counts:
+        r = testbed.run_split(frames, n, total_cores=args.cores)
+        if base is None:
+            base = r
+        ok = "✓" if np.allclose(r.outputs, base.outputs, atol=1e-5) else "✗"
+        observations.append((n, r.wall_s, r.energy_j))
+        print(f"  {n:2d}  {r.cores_per_container:9d}   {r.wall_s:8.2f}   "
+              f"{r.avg_power_w:9.1f}   {r.energy_j:10.1f}   "
+              f"{r.wall_s/base.wall_s:5.2f}  {r.energy_j/base.energy_j:5.2f}"
+              f"   {ok}")
+
+    ns = np.array([o[0] for o in observations], float)
+    tfit = fit_best(ns, np.array([o[1] for o in observations]) / base.wall_s)
+    efit = fit_best(ns, np.array([o[2] for o in observations])
+                    / base.energy_j)
+    print(f"\nfitted time model:   {tfit.kind} "
+          f"{tuple(round(c, 3) for c in tfit.coef)} (rmse {tfit.rmse:.3f})")
+    print(f"fitted energy model: {efit.kind} "
+          f"{tuple(round(c, 3) for c in efit.coef)} (rmse {efit.rmse:.3f})")
+
+    sched = DivideAndSaveScheduler(list(args.counts), objective="energy",
+                                   epsilon=0.0)
+    for n, t, e in observations:
+        sched.observe(n, t, e)
+    print(f"scheduler picks n* = {sched.pick()} (energy objective)")
+
+    n_best, t_best, e_best = min(observations, key=lambda o: o[2])
+    print(f"\nbest measured: n={n_best}: "
+          f"time −{(1-t_best/base.wall_s)*100:.0f}%  "
+          f"energy −{(1-e_best/base.energy_j)*100:.0f}% vs one container")
+
+
+if __name__ == "__main__":
+    main()

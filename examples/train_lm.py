@@ -1,0 +1,84 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family LM trained
+for a few hundred steps on the synthetic stream, with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+The 100M config is the qwen3 block structure (GQA + qk_norm + SwiGLU) at
+d_model 640 — same code path the pod runs at 8B, shrunk to CPU scale.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import LmTokenStream
+from repro.models.model import Model
+from repro.train import checkpoint
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import AdamWConfig
+
+LM100M = ArchConfig(
+    name="lm100m",
+    arch_type="dense",
+    source="qwen3 family, scaled to ~100M for the CPU example",
+    n_layers=10,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=1792,
+    vocab_size=50_304,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--out", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    model = Model(LM100M)
+    print(f"params: {LM100M.param_count():,} (~100M target)")
+    stream = LmTokenStream(LM100M.vocab_size, seq_len=args.seq,
+                           batch_size=args.batch)
+    tcfg = TrainConfig(opt=AdamWConfig(
+        lr=args.lr, warmup_steps=20, total_steps=args.steps,
+        weight_decay=0.1, grad_clip=1.0))
+
+    t0 = time.time()
+    history = []
+
+    def log(step, m):
+        history.append(m)
+        print(f"step {step:4d}  loss {m['loss']:.4f}  "
+              f"gnorm {m.get('grad_norm', 0):.2f}  lr {m.get('lr', 0):.2e}  "
+              f"{m['wall_s']:.0f}s", flush=True)
+
+    params, opt_state, hist = train(model, tcfg, stream.batches(),
+                                    n_steps=args.steps, log_every=10,
+                                    logger=log)
+    os.makedirs(args.out, exist_ok=True)
+    checkpoint.save(os.path.join(args.out, "final"), params,
+                    meta={"steps": args.steps,
+                          "final_loss": hist[-1]["loss"]})
+    with open(os.path.join(args.out, "history.json"), "w") as f:
+        json.dump(hist, f, indent=2)
+    print(f"done in {time.time()-t0:.0f}s; "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"checkpoint at {args.out}")
+    assert hist[-1]["loss"] < hist[0]["loss"], "training did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, reduce_config
+from repro.configs.registry import ARCH_NAMES, assigned_pairs, get_config, get_shape
+
+__all__ = [
+    "ARCH_NAMES",
+    "ArchConfig",
+    "INPUT_SHAPES",
+    "InputShape",
+    "assigned_pairs",
+    "get_config",
+    "get_shape",
+    "reduce_config",
+]

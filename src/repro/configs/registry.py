@@ -1,0 +1,53 @@
+"""Registry of the 10 assigned architectures (+ the CPU-testbed CNN)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, reduce_config
+
+_MODULES = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+# extras: demonstrably-one-file additions beyond the assigned pool; they
+# are selectable everywhere (--arch) but excluded from assigned_pairs()
+_EXTRA_MODULES = {
+    "llama3.1-8b": "repro.configs.llama31_8b",
+}
+_MODULES.update(_EXTRA_MODULES)
+EXTRA_ARCH_NAMES = tuple(_EXTRA_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return reduce_config(get_config(name[: -len("-reduced")]))
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def assigned_pairs() -> list[tuple[str, str]]:
+    """All (arch, shape) pairs that must lower (skips per DESIGN.md)."""
+    pairs = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            if shape.name == "long_500k" and not cfg.supports_long_decode:
+                continue  # documented skip (DESIGN.md §Arch-applicability)
+            pairs.append((arch, shape.name))
+    return pairs

@@ -1,0 +1,28 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — enc-dec; mel+conv frontend stubbed.
+
+input_specs() provides the 1500 post-conv frame embeddings directly
+(the mel-spectrogram + conv1d stem is the allowed frontend stub). The
+assigned seq_len applies to the decoder; the encoder sees encoder_seq frames.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    n_layers=32,             # decoder layers
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51_866,
+    n_encoder_layers=32,
+    encoder_seq=1500,
+    cross_attention=True,
+    act="gelu",
+    tie_embeddings=True,
+    norm_type="layernorm",
+    mlp_gated=False,
+    pos_embed="learned",
+)

@@ -1,0 +1,5 @@
+from repro.core import containers, energy_model, hlo_analysis, roofline, splitter
+from repro.core.scheduler import DivideAndSaveScheduler
+
+__all__ = ["containers", "energy_model", "hlo_analysis", "roofline",
+           "splitter", "DivideAndSaveScheduler"]

@@ -1,0 +1,65 @@
+"""Container abstraction on a TPU pod: disjoint sub-mesh replica groups.
+
+The paper's "container with C/n CPU cores" maps to "model replica on a
+sub-mesh of chips/n chips" (DESIGN.md §2). On a pod mesh
+``(data=D, model=M)`` the factorisation is expressed *logically*: choosing
+``n`` containers re-factors the pod into ``(data=n, model=chips/n)`` with
+parameters replicated over ``data`` (no cross-container collectives) and the
+request batch split over ``data`` (core/splitter.py semantics).
+
+``ContainerSpec`` enumerates the feasible factorisations of a pod and their
+per-chip weight memory (weights are replicated per container — the analogue
+of the paper's per-container memory overhead that capped the TX2 at 6
+containers); the scheduler uses this to bound its search.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ContainerSpec:
+    n_containers: int
+    chips_per_container: int
+    total_chips: int
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        return (self.n_containers, self.chips_per_container)
+
+
+def factorizations(total_chips: int, max_containers: int | None = None
+                   ) -> list[ContainerSpec]:
+    """All 2^k factorisations n × (chips/n) of the pod."""
+    out = []
+    n = 1
+    while n <= total_chips:
+        if max_containers is None or n <= max_containers:
+            out.append(ContainerSpec(n, total_chips // n, total_chips))
+        n *= 2
+    return out
+
+
+def weight_bytes_per_chip(cfg: ArchConfig, spec: ContainerSpec,
+                          bytes_per_param: int = 2) -> float:
+    """Weights are sharded inside a container, replicated across them."""
+    return cfg.param_count() * bytes_per_param / spec.chips_per_container
+
+
+def feasible(cfg: ArchConfig, spec: ContainerSpec, hbm_bytes: float = 16e9,
+             activation_headroom: float = 0.35,
+             extra_bytes_per_chip: float = 0.0) -> bool:
+    """Does one container's weight shard (+KV/activations) fit per chip?"""
+    need = weight_bytes_per_chip(cfg, spec) + extra_bytes_per_chip
+    return need <= hbm_bytes * (1.0 - activation_headroom)
+
+
+def container_mesh(spec: ContainerSpec,
+                   axis_names: tuple[str, str] = ("data", "model")):
+    """Build the jax mesh for a factorisation (requires enough devices —
+    used under the dry-run's host-device override)."""
+    return jax.make_mesh(spec.mesh_shape, axis_names)

@@ -1,0 +1,113 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = coll_bytes  / (chips × link_bw)
+
+HLO figures come from the while-aware parser in ``hlo_analysis`` (XLA's own
+``cost_analysis`` counts scan bodies once; see that module). Parsed HLO
+shapes are per-chip, so pod totals are parser × chips and the terms reduce
+to per-chip figures over per-chip bandwidths — identical algebra, stated
+both ways in the report.
+
+Hardware model (TPU v5e-class, per assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.hlo_analysis import HloCost
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (one effective link per phase)
+
+# energy model constants (per chip, activity-based; cf. DESIGN.md §2)
+P_IDLE_W = 80.0
+P_PEAK_W = 350.0
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip raw terms
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    # seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    # derived
+    dominant: str
+    step_time: float
+    model_flops: float          # 6·N_active·D (pod-global)
+    hlo_flops_total: float      # parser flops × chips
+    useful_ratio: float         # model_flops / hlo_flops_total
+    collectives_by_kind: dict
+    # energy
+    utilization: float
+    power_w_per_chip: float
+    energy_j: float
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | **{self.dominant}** | "
+                f"{self.useful_ratio:.2f} | {self.energy_j:.1f} |")
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """6·N·D for training, 2·N·D for inference (fwd only), N = active params.
+
+    D = tokens processed this step: B×S for train/prefill, B for decode.
+    Encoder-decoder archs process the encoder's frame tokens with the
+    encoder params separately (and not at all during decode).
+    """
+    n = cfg.active_param_count()
+    n_enc = 0
+    if cfg.n_encoder_layers:
+        n_enc = cfg._encoder_layer_params() * cfg.n_encoder_layers
+        n -= n_enc
+    factor = 6.0 if shape.kind == "train" else 2.0
+    if shape.kind == "decode":
+        return factor * n * shape.global_batch       # encoder not rerun
+    d_dec = shape.global_batch * shape.seq_len
+    d_enc = shape.global_batch * cfg.encoder_seq
+    return factor * (n * d_dec + n_enc * d_enc)
+
+
+def build_report(arch: str, shape: InputShape, cfg: ArchConfig,
+                 mesh_desc: str, chips: int, cost: HloCost) -> RooflineReport:
+    t_c = cost.flops_per_chip / PEAK_FLOPS
+    t_m = cost.bytes_per_chip / HBM_BW
+    t_x = cost.coll_wire_bytes_per_chip / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    step = max(t_c, t_m, t_x)
+    mf = model_flops(cfg, shape)
+    hlo_total = cost.flops_per_chip * chips
+    util = t_c / step if step > 0 else 0.0
+    power = P_IDLE_W + (P_PEAK_W - P_IDLE_W) * util
+    energy = chips * power * step
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_desc, chips=chips,
+        flops_per_chip=cost.flops_per_chip,
+        bytes_per_chip=cost.bytes_per_chip,
+        coll_bytes_per_chip=cost.coll_wire_bytes_per_chip,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        dominant=dominant, step_time=step,
+        model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        collectives_by_kind=cost.collectives,
+        utilization=util, power_w_per_chip=power, energy_j=energy)
+
+
+HEADER = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+          "| dominant | useful | energy (J) |\n"
+          "|---|---|---|---|---|---|---|---|---|")

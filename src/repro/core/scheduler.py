@@ -1,0 +1,137 @@
+"""Divide-and-Save scheduler: choose the container count online.
+
+The paper's concluding proposal ("energy-efficient job schedulers that split
+input data, obtaining the optimal number of containers in an online
+fashion") implemented:
+
+  * observe (n, time, energy) samples of completed jobs,
+  * fit the paper's convex model forms (quadratic / saturating-exp,
+    whichever fits better) to each metric,
+  * pick argmin of the chosen objective over the *feasible* container
+    counts (memory-bounded, cf. core/containers.py), with ε-greedy
+    exploration so unvisited counts eventually get sampled.
+
+Works identically for the CPU testbed (samples = measured wall times) and
+the TPU pod (samples = roofline-derived step time / energy per
+factorisation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import defaultdict
+from typing import Literal
+
+from repro.core.energy_model import FittedModel, fit_best
+
+Objective = Literal["energy", "time", "energy_under_deadline"]
+
+
+@dataclasses.dataclass
+class Observation:
+    n: int
+    time_s: float
+    energy_j: float
+
+
+class DivideAndSaveScheduler:
+    def __init__(self, feasible_counts: list[int],
+                 objective: Objective = "energy",
+                 deadline_s: float | None = None,
+                 epsilon: float = 0.1, seed: int = 0):
+        if not feasible_counts:
+            raise ValueError("no feasible container counts")
+        self.feasible = sorted(set(feasible_counts))
+        self.objective = objective
+        self.deadline = deadline_s
+        self.epsilon = epsilon
+        self._rng = random.Random(seed)
+        self._obs: list[Observation] = []
+        self.time_model: FittedModel | None = None
+        self.energy_model: FittedModel | None = None
+
+    # ------------------------------------------------------------------
+    def observe(self, n: int, time_s: float, energy_j: float) -> None:
+        self._obs.append(Observation(n, time_s, energy_j))
+        self._refit()
+
+    def _refit(self) -> None:
+        by_n: dict[int, list[Observation]] = defaultdict(list)
+        for o in self._obs:
+            by_n[o.n].append(o)
+        if len(by_n) < 3:        # need 3 distinct counts to fit 3 params
+            return
+        xs = sorted(by_n)
+        t = [sum(o.time_s for o in by_n[n]) / len(by_n[n]) for n in xs]
+        e = [sum(o.energy_j for o in by_n[n]) / len(by_n[n]) for n in xs]
+        self.time_model = fit_best(xs, t)
+        self.energy_model = fit_best(xs, e)
+
+    # ------------------------------------------------------------------
+    def pick(self) -> int:
+        unvisited = [n for n in self.feasible
+                     if not any(o.n == n for o in self._obs)]
+        if self.time_model is None or self.energy_model is None:
+            # bootstrap: probe extremes then middle
+            if unvisited:
+                return unvisited[len(unvisited) // 2 if len(unvisited) > 2
+                                 else 0]
+            return self.feasible[0]
+        if unvisited and self._rng.random() < self.epsilon:
+            return self._rng.choice(unvisited)
+        return self._argmin()
+
+    # fits worse than this (normalised rmse) fall back to observed means —
+    # the paper's convex forms assume a small n range; a pod sweep over
+    # n ∈ [1, 256] can be V-shaped and mislead a quadratic's argmin
+    RMSE_TRUST = 0.15
+
+    def _observed_mean(self, n: int, metric: str) -> float | None:
+        vals = [getattr(o, metric) for o in self._obs if o.n == n]
+        return sum(vals) / len(vals) if vals else None
+
+    def _argmin(self) -> int:
+        t_mean = sum(o.time_s for o in self._obs) / max(len(self._obs), 1)
+        e_mean = sum(o.energy_j for o in self._obs) / max(len(self._obs), 1)
+        trust = (self.time_model.rmse / max(t_mean, 1e-9) < self.RMSE_TRUST
+                 and self.energy_model.rmse / max(e_mean, 1e-9)
+                 < self.RMSE_TRUST)
+        best_n, best_v = None, None
+        for n in self.feasible:
+            t = float(self.time_model(n))
+            e = float(self.energy_model(n))
+            if not trust:  # poor fit: prefer the measured means
+                t_obs = self._observed_mean(n, "time_s")
+                e_obs = self._observed_mean(n, "energy_j")
+                t = t_obs if t_obs is not None else t
+                e = e_obs if e_obs is not None else e
+            if self.objective == "time":
+                v = t
+            elif self.objective == "energy":
+                v = e
+            else:  # energy under deadline
+                if self.deadline is not None and t > self.deadline:
+                    continue
+                v = e
+            if best_v is None or v < best_v:
+                best_n, best_v = n, v
+        if best_n is None:       # deadline infeasible everywhere: fall back
+            best_n = min(self.feasible,
+                         key=lambda n: float(self.time_model(n)))
+        return best_n
+
+    # ------------------------------------------------------------------
+    @property
+    def n_observations(self) -> int:
+        return len(self._obs)
+
+    def summary(self) -> dict:
+        return {
+            "feasible": self.feasible,
+            "observations": len(self._obs),
+            "time_model": (self.time_model.kind, self.time_model.coef)
+            if self.time_model else None,
+            "energy_model": (self.energy_model.kind, self.energy_model.coef)
+            if self.energy_model else None,
+            "choice": self.pick(),
+        }

@@ -1,0 +1,156 @@
+"""CPU container testbed — the paper's mechanism, literally.
+
+``docker run --cpus=C/n`` is reproduced as an OS process pinned to a
+disjoint set of C/n cores (``os.sched_setaffinity``, applied BEFORE jax
+initialises its threadpool, so XLA's worker threads inherit the cpuset —
+the in-process equivalent of the cgroup cpu limit). The workload is a
+YOLOv4-tiny-shaped convolutional detector in JAX run frame-by-frame over a
+synthetic video; the video is split into equal segments (core/splitter.py)
+and all containers run simultaneously, results concatenated — §V steps 1-4.
+
+Energy on the host is modelled (no power sensor in this container):
+``P(t) = P_IDLE + P_CORE · busy_cores(t)`` integrated over the run — the
+same activity-based bookkeeping the paper measures with the Jetson INA
+sensors. Constants below are host-class x86 figures; they cancel in the
+normalised (vs 1-container benchmark) plots the paper reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import splitter
+
+P_IDLE_W = 40.0    # host idle draw
+P_CORE_W = 3.5     # per busy core
+
+_FRAME_SHAPE = (128, 128, 3)
+# YOLOv4-tiny-ish backbone: stride-2 conv stages + 1x1 head (CSP blocks
+# collapsed — we need the compute/memory character, not mAP)
+_CHANNELS = (16, 32, 64, 128, 256)
+
+
+def _child(cores, frames, batch, conn, go):
+    """Container body. Affinity FIRST, then jax import (threadpool size
+    follows the cpuset), then warmup, then the timed frame loop."""
+    os.sched_setaffinity(0, cores)
+    import jax
+    import jax.numpy as jnp
+
+    def init(key):
+        params = []
+        cin = _FRAME_SHAPE[-1]
+        for i, cout in enumerate(_CHANNELS):
+            key, k1 = jax.random.split(key)
+            params.append(jax.random.normal(k1, (3, 3, cin, cout),
+                                            jnp.float32) * 0.1)
+            cin = cout
+        key, k1 = jax.random.split(key)
+        head = jax.random.normal(k1, (1, 1, cin, 18), jnp.float32) * 0.1
+        return params, head
+
+    @jax.jit
+    def infer(params_head, x):
+        params, head = params_head
+        for w in params:
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(2, 2), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jnp.maximum(x, 0.1 * x)          # leaky relu
+        x = jax.lax.conv_general_dilated(
+            x, head, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jnp.max(x, axis=(1, 2))           # per-frame detection proxy
+
+    ph = init(jax.random.PRNGKey(0))
+    warm = infer(ph, jnp.asarray(frames[:batch]))
+    warm.block_until_ready()
+    conn.send("ready")
+    go.wait()
+
+    t0 = time.perf_counter()
+    outs = []
+    for i in range(0, len(frames), batch):
+        fb = frames[i:i + batch]
+        if len(fb) < batch:                      # pad the tail batch
+            fb = np.concatenate(
+                [fb, np.zeros((batch - len(fb), *_FRAME_SHAPE),
+                              np.float32)])
+        outs.append(np.asarray(infer(ph, jnp.asarray(fb))))
+    dt = time.perf_counter() - t0
+    out = np.concatenate(outs)[:len(frames)]
+    conn.send((dt, out))
+    conn.close()
+
+
+@dataclasses.dataclass
+class SplitRunResult:
+    n_containers: int
+    cores_per_container: int
+    wall_s: float                 # max over containers (parallel)
+    per_container_s: list
+    outputs: np.ndarray           # combined, original frame order
+    busy_core_seconds: float
+
+    @property
+    def avg_power_w(self) -> float:
+        return P_IDLE_W + P_CORE_W * self.busy_core_seconds / self.wall_s
+
+    @property
+    def energy_j(self) -> float:
+        return self.avg_power_w * self.wall_s
+
+
+def run_split(frames: np.ndarray, n_containers: int,
+              total_cores: int | None = None,
+              batch: int = 8) -> SplitRunResult:
+    """§V: split the video into n segments, spawn n pinned containers,
+    run simultaneously, combine in order."""
+    avail = sorted(os.sched_getaffinity(0))
+    total_cores = total_cores or len(avail)
+    avail = avail[:total_cores]
+    cpc = max(1, total_cores // n_containers)
+    segs = splitter.split_array(frames, n_containers)
+
+    ctx = mp.get_context("spawn")
+    go = ctx.Event()
+    procs, conns = [], []
+    for i, seg in enumerate(segs):
+        cores = [avail[(i * cpc + j) % len(avail)] for j in range(cpc)]
+        parent, child = ctx.Pipe()
+        pr = ctx.Process(target=_child,
+                         args=(set(cores), seg, batch, child, go))
+        pr.start()
+        procs.append(pr)
+        conns.append(parent)
+    for c in conns:                # all children compiled & ready
+        assert c.recv() == "ready"
+    t0 = time.perf_counter()
+    go.set()
+    times, outs = [], []
+    for c in conns:
+        dt, out = c.recv()
+        times.append(dt)
+        outs.append(out)
+    wall = time.perf_counter() - t0
+    for pr in procs:
+        pr.join()
+    combined = splitter.combine_arrays(outs)
+    busy = sum(t * cpc for t in times)
+    return SplitRunResult(n_containers, cpc, wall, times, combined, busy)
+
+
+def run_single_container(frames: np.ndarray, cores: int,
+                         batch: int = 8) -> float:
+    """Fig. 1 point: ONE container limited to ``cores`` cores."""
+    return run_split(frames, 1, total_cores=cores, batch=batch).wall_s
+
+
+def make_video(n_frames: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n_frames, *_FRAME_SHAPE)).astype(np.float32)

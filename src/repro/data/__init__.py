@@ -1,0 +1,3 @@
+from repro.data.pipeline import LmTokenStream, VideoRequestStream
+
+__all__ = ["LmTokenStream", "VideoRequestStream"]

@@ -1,0 +1,2 @@
+# Pallas TPU kernels for the inference hot-spots (validated interpret=True
+# on CPU against the pure-jnp oracles in ref.py; dispatched via ops.py).

@@ -1,0 +1,83 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, jnp oracle elsewhere.
+
+The models call these — never the kernels or oracles directly — so the same
+model code runs the Pallas path on real TPU hardware and the numerically
+identical jnp path on CPU (tests, dry-run lowering). Set
+``REPRO_FORCE_PALLAS=interpret`` to exercise the Pallas kernels in interpret
+mode from the model layer (slow; used by a couple of integration tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import flash_ref, ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _mode() -> str:
+    forced = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if forced == "interpret":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "tpu"
+    return "ref"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0):
+    mode = _mode()
+    if mode == "ref":
+        # flash-structured jnp path: same tiles/memory behaviour as the
+        # Pallas kernel (flash_ref docstring) — this is what the dry-run
+        # lowers, so the roofline describes the kernel we'd actually run.
+        return flash_ref.flash_attention(q, k, v, causal=causal,
+                                         window=window, softcap=softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap,
+                               interpret=(mode == "interpret"))
+
+
+def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
+                     k_scale=None, v_scale=None):
+    """Optional k/v scales mean an int8-quantised cache (dequant per tile —
+    the blocked paths keep the dequantised tiles in VMEM/registers)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.decode_attention_blocked(q, k, v, valid, softcap=softcap,
+                                            k_scale=k_scale, v_scale=v_scale)
+    if k_scale is not None:  # Pallas int8 kernel: dequant in VMEM
+        return _da.decode_attention_int8(q, k, v, valid, k_scale, v_scale,
+                                         softcap=softcap,
+                                         interpret=(mode == "interpret"))
+    return _da.decode_attention(q, k, v, valid, softcap=softcap,
+                                interpret=(mode == "interpret"))
+
+
+def ssd_scan(x, dt, A, B_, C_, D, *, chunk: int = 64):
+    mode = _mode()
+    if mode == "ref":
+        return ref.ssd_scan_seq(x, dt, A, B_, C_, D, chunk=chunk)
+    return _ssd.ssd_scan(x, dt, A, B_, C_, D, chunk=chunk,
+                         interpret=(mode == "interpret"))
+
+
+def mla_decode_ctx(q_lat, q_rope, ckv, k_rope, valid, *, scale: float):
+    mode = _mode()
+    if mode == "ref":
+        return ref.mla_decode_ctx(q_lat, q_rope, ckv, k_rope, valid,
+                                  scale=scale)
+    from repro.kernels import mla_decode as _mla
+    return _mla.mla_decode_ctx(q_lat, q_rope, ckv, k_rope, valid,
+                               scale=scale, interpret=(mode == "interpret"))
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    mode = _mode()
+    if mode == "ref":
+        return ref.rmsnorm(x, scale, eps=eps)
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=(mode == "interpret"))

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+Grid (batch, S/Q): the chunk axis is TPU-sequential, so the inter-chunk
+recurrent state (nh, hd, ds) lives in VMEM scratch and is carried across
+chunk iterations — the HBM→VMEM traffic per chunk is exactly one tile of
+x/dt/B/C and one tile of y, the minimum possible for this op.
+
+Within a chunk the SSD quadratic form is three MXU matmuls per head
+(G = C·Bᵀ, masked-decay weighting, y = M·(dt·x)) plus the carried-state
+contribution. Heads are vectorised in-kernel (the head axis is folded into
+the matmul batch via dot_general batching dims).
+
+All decay math runs in fp32; the recurrence is numerically identical to the
+oracle in ref.py (same segsum formulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, d_ref, y_ref, st_ref,
+                state_scr, *, chunk: int, nh: int, hd: int, ds: int,
+                ng: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    Q = chunk
+    x = x_ref[0].astype(jnp.float32)          # (Q, nh, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, nh)
+    A = A_ref[...].astype(jnp.float32)        # (nh,)
+    B_ = b_ref[0].astype(jnp.float32)         # (Q, ng, ds)
+    C_ = c_ref[0].astype(jnp.float32)         # (Q, ng, ds)
+    D = d_ref[...].astype(jnp.float32)        # (nh,)
+
+    rep = nh // ng
+    Bh = jnp.repeat(B_, rep, axis=1)          # (Q, nh, ds)
+    Ch = jnp.repeat(C_, rep, axis=1)
+
+    dA = dt * A[None, :]                      # (Q, nh)
+    dA_cum = jnp.cumsum(dA, axis=0)           # inclusive
+    # decay matrix L[h, q, j] = exp(cum[q] - cum[j]) for j <= q
+    diff = dA_cum.T[:, :, None] - dA_cum.T[:, None, :]       # (nh, Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where((ki <= qi)[None], jnp.exp(diff), 0.0)
+
+    # intra-chunk quadratic term
+    G = jax.lax.dot_general(
+        jnp.moveaxis(Ch, 1, 0), jnp.moveaxis(Bh, 1, 0),
+        (((2,), (2,)), ((0,), (0,))))                         # (nh, Q, Q)
+    M = G * L                                                 # (nh, Q, Q)
+    dtx = x * dt[:, :, None]                                  # (Q, nh, hd)
+    y_diag = jax.lax.dot_general(
+        M, jnp.moveaxis(dtx, 1, 0), (((2,), (1,)), ((0,), (0,))))  # (nh, Q, hd)
+
+    # carried-in state contribution: y_off[q] = exp(cum[q]) * C_q · state
+    state = state_scr[...]                                    # (nh, hd, ds)
+    y_off = jax.lax.dot_general(
+        jnp.moveaxis(Ch, 1, 0), state, (((2,), (2,)), ((0,), (0,))))  # (nh, Q, hd)
+    y_off = y_off * jnp.exp(dA_cum).T[:, :, None]
+
+    y = y_diag + y_off + jnp.moveaxis(x, 1, 0) * D[:, None, None]
+    y_ref[0] = jnp.moveaxis(y, 0, 1).astype(y_ref.dtype)      # (Q, nh, hd)
+
+    # state update: decay full chunk + within-chunk contributions
+    decay_to_end = jnp.exp(dA_cum[-1, :][None, :] - dA_cum)   # (Q, nh)
+    wx = dtx * decay_to_end[:, :, None]                       # (Q, nh, hd)
+    new_contrib = jax.lax.dot_general(
+        jnp.moveaxis(wx, 1, 0), jnp.moveaxis(Bh, 1, 0),
+        (((1,), (1,)), ((0,), (0,))))                         # (nh, hd, ds)
+    chunk_decay = jnp.exp(dA_cum[-1, :])                      # (nh,)
+    state_scr[...] = state * chunk_decay[:, None, None] + new_contrib
+
+    @pl.when(c_idx == pl.num_programs(1) - 1)
+    def _emit_state():
+        st_ref[0] = state_scr[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+             C_: jax.Array, D: jax.Array, *, chunk: int = 64,
+             interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Shapes as in ref.ssd_scan. Returns (y, final_state)."""
+    Bb, S, nh, hd = x.shape
+    ng, ds = B_.shape[2], B_.shape[3]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (Bb, S // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nh=nh, hd=hd,
+                               ds=ds, ng=ng)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, nh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((nh,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, ng, ds), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, ng, ds), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((nh,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, nh, hd, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((Bb, nh, hd, ds), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_, C_, D)
+    return y, st

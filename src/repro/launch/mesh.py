@@ -1,0 +1,29 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods,
+    (pod=2, data=16, model=16) — the pod axis is pure data parallelism
+    across the inter-pod (DCN-ish) boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_container_mesh(total_chips: int, n_containers: int):
+    """The paper's factorisation: n containers × (chips/n) model shards.
+    The "data" axis is the container axis (weights replicated across it)."""
+    assert total_chips % n_containers == 0
+    return jax.make_mesh(
+        (n_containers, total_chips // n_containers), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    """Axis size by name (1 if absent). Works for Mesh and AbstractMesh."""
+    return dict(mesh.shape).get(name, 1)

@@ -1,0 +1,74 @@
+"""Serving launcher: container-pool serving of a synthetic request stream.
+
+The pod analogue runs one ServingEngine per container sub-mesh; on this CPU
+host the pool shares the device but keeps the same splitting semantics.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --containers 4 --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.core.scheduler import DivideAndSaveScheduler
+from repro.models.model import Model
+from repro.serving.engine import Request
+from repro.serving.pool import ContainerServingPool
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_NAMES)
+    ap.add_argument("--containers", type=int, default=0,
+                    help="0 = let the scheduler choose online")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch + "-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def batch_of_requests(base):
+        return [Request(rid=base + i,
+                        prompt=rng.integers(0, cfg.vocab_size, (8,),
+                                            dtype=np.int32),
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+
+    if args.containers:
+        pool = ContainerServingPool(model, params, args.containers,
+                                    n_slots_per_container=args.slots)
+        t0 = time.time()
+        done, per = pool.serve(batch_of_requests(0))
+        dt = time.time() - t0
+        toks = sum(len(c.tokens) for c in done)
+        print(f"n={args.containers}: {len(done)} requests, {toks} tokens "
+              f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+        return
+
+    # online mode: the scheduler probes container counts across job batches
+    feasible = [1, 2, 4]
+    sched = DivideAndSaveScheduler(feasible, objective="energy", epsilon=0.2)
+    for job in range(6):
+        n = sched.pick()
+        pool = ContainerServingPool(model, params, n,
+                                    n_slots_per_container=args.slots)
+        t0 = time.time()
+        done, _ = pool.serve(batch_of_requests(job * args.requests))
+        dt = time.time() - t0
+        energy = dt * (40.0 + 3.5 * min(8, n * 2))   # activity model
+        sched.observe(n, dt, energy)
+        print(f"job {job}: n={n} wall {dt:.2f}s energy {energy:.1f}J")
+    print("scheduler summary:", sched.summary())
+
+
+if __name__ == "__main__":
+    main()

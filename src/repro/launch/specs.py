@@ -1,0 +1,103 @@
+"""Abstract step-function + input-spec builders for the dry-run.
+
+For every (arch, input-shape) pair this module produces:
+  * ``input_specs(cfg, shape)`` — ShapeDtypeStruct stand-ins for every model
+    input (no device allocation),
+  * ``abstract_state(...)``      — params / optimizer state / KV-cache
+    ShapeDtypeStructs via ``jax.eval_shape``,
+  * ``build_step(...)``          — the pure step function to lower:
+    train_step for ``train`` shapes, ``prefill`` for prefill shapes and
+    ``decode_step`` (ONE new token against a seq_len KV cache) for decode
+    shapes.
+
+Everything here is abstract: the dry-run lowers with these structs and never
+materialises a single parameter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.model import Model
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import init_opt_state
+
+# Production dtypes: bf16 params/activations, f32 optimizer state (the
+# optimizer keeps f32 moments internally regardless of param dtype).
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the *batch* inputs of the step function."""
+    B = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": sds((B, shape.seq_len), jnp.int32)}
+        if cfg.n_vision_tokens:
+            specs["vision_embeds"] = sds(
+                (B, cfg.n_vision_tokens, cfg.vision_embed_dim), PARAM_DTYPE)
+        if cfg.n_encoder_layers:
+            specs["audio_frames"] = sds(
+                (B, cfg.encoder_seq, cfg.d_model), PARAM_DTYPE)
+        return specs
+    # decode: ONE new token per sequence + per-sequence positions
+    return {"tokens": sds((B, 1), jnp.int32),
+            "pos": sds((B,), jnp.int32)}
+
+
+def abstract_params(model: Model) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model.init(k, dtype=PARAM_DTYPE), key)
+
+
+def abstract_opt_state(params_struct: Any) -> Any:
+    return jax.eval_shape(init_opt_state, params_struct)
+
+
+def abstract_cache(model: Model, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(model.init_cache, batch, max_len,
+                          dtype=CACHE_DTYPE))
+
+
+def build_step(model: Model, shape: InputShape,
+               tcfg: TrainConfig | None = None) -> Callable:
+    """The pure function the dry-run lowers (signature depends on kind)."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig(remat=True)
+        return make_train_step(model, tcfg)
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                     dtype=CACHE_DTYPE)
+            return model.prefill(params, batch, cache, logits_at=-1)
+        return prefill_step
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, batch["tokens"], cache,
+                                 batch["pos"])
+    return decode_step
+
+
+def lowering_args(model: Model, shape: InputShape,
+                  tcfg: TrainConfig | None = None):
+    """(step_fn, abstract positional args) ready for jit(...).lower(*args)."""
+    cfg = model.cfg
+    step = build_step(model, shape, tcfg)
+    batch = input_specs(cfg, shape)
+    params = abstract_params(model)
+    if shape.kind == "train":
+        return step, (params, abstract_opt_state(params), batch)
+    if shape.kind == "prefill":
+        return step, (params, batch)
+    cache = abstract_cache(model, shape.global_batch, shape.seq_len)
+    return step, (params, cache, batch)

@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# (the dry-run device-count override must precede every jax import)
+
+import argparse
+import json
+import subprocess
+import sys
+
+from repro.configs.registry import assigned_pairs
+from repro.launch.dryrun import RESULTS_DIR, result_path
+
+
+def run_sweep(meshes: list[str], force: bool = False,
+              jobs: int = 4) -> list[tuple[str, str, str, bool]]:
+    """Run every assigned (arch, shape) × mesh dry-run in subprocesses
+    (isolation: one failure doesn't kill the sweep; JSON results cache)."""
+    todo = []
+    for mesh in meshes:
+        for arch, shape in assigned_pairs():
+            if force or not os.path.exists(result_path(arch, shape, mesh)):
+                todo.append((arch, shape, mesh))
+    print(f"{len(todo)} dry-runs to execute")
+    procs: list[tuple[tuple, subprocess.Popen]] = []
+    results = []
+
+    def drain(block_all=False):
+        while procs and (block_all or len(procs) >= jobs):
+            (key, pr) = procs[0]
+            pr.wait()
+            procs.pop(0)
+            ok = os.path.exists(result_path(*key))
+            results.append((*key, ok))
+            print(("[ok]  " if ok else "[FAIL]"), *key, flush=True)
+
+    for arch, shape, mesh in todo:
+        drain()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh]
+        if force:
+            cmd.append("--force")
+        procs.append(((arch, shape, mesh),
+                      subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                                       stderr=subprocess.DEVNULL)))
+    drain(block_all=True)
+    return results
+
+
+def collect() -> list[dict]:
+    rows = []
+    if not os.path.isdir(RESULTS_DIR):
+        return rows
+    for fn in sorted(os.listdir(RESULTS_DIR)):
+        if fn.endswith(".json"):
+            with open(os.path.join(RESULTS_DIR, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | fsdp | t_comp (ms) | t_mem (ms) | "
+           "t_coll (ms) | dominant | step (ms) | useful | HBM/chip (GB) | "
+           "energy (J) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for d in rows:
+        r = d["roofline"]
+        mem = d.get("memory_analysis", {})
+        hbm = (mem.get("temp_size_in_bytes", 0)
+               + mem.get("argument_size_in_bytes", 0)) / 1e9
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{'Y' if d.get('fsdp') else 'n'} | "
+            f"{r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} | "
+            f"{r['t_collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r['step_time_s']*1e3:.2f} | {r['useful_ratio']:.3f} | "
+            f"{hbm:.2f} | {r['energy_j']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--table-only", action="store_true")
+    args = ap.parse_args()
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    if not args.table_only:
+        results = run_sweep(meshes, force=args.force, jobs=args.jobs)
+        fails = [r for r in results if not r[3]]
+        print(f"\n{len(results)} run, {len(fails)} failed")
+        for f in fails:
+            print("FAILED:", f[:3])
+    print(markdown_table(collect()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

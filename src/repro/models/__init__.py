@@ -1,0 +1,3 @@
+from repro.models.model import Model, family
+
+__all__ = ["Model", "family"]

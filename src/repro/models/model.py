@@ -1,0 +1,532 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Layer stacks are ``jax.lax.scan``-ed over stacked params so HLO size and
+compile time are depth-independent; heterogeneous archs scan *super-blocks*:
+
+  family      segments
+  ----------  -----------------------------------------------------------
+  dense       [stack: attn_mlp × L]                (qwen3, stablelm, internvl2 LM)
+  gemma       [super: (5×local + 1×global) × L//6, rem: local × (L mod 6)]
+  moe         [dense0 × n_dense (unrolled), stack: attn_moe × (L - n_dense)]
+  ssm         [stack: ssm × L]                     (mamba2)
+  zamba       [super: (6×ssm + shared attn_mlp) × L//6, rem: ssm × (L mod 6)]
+  whisper     encoder [enc × L_enc] + decoder [cross × L]
+
+Caches mirror the param tree; decode positions are per-sequence ``(B,)``
+(continuous batching decodes ragged slots in lockstep HLO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import checkpoint_policies as _cp
+
+
+def _remat(fn, policy: str):
+    if policy == "collectives":
+        return jax.checkpoint(fn, policy=_cp.save_only_these_names(
+            "attn_out", "mlp_out", "moe_out", "ssm_out"))
+    return jax.checkpoint(fn)
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.layers import (constrain_batch, embed_fwd, init_embed,
+                                 init_linear, init_norm, linear_fwd,
+                                 norm_fwd, truncated_normal)
+
+Params = Any
+Cache = Any
+
+
+def family(cfg: ArchConfig) -> str:
+    if cfg.arch_type == "audio":
+        return "whisper"
+    if cfg.arch_type == "hybrid":
+        return "zamba"
+    if cfg.arch_type == "ssm":
+        return "ssm"
+    if cfg.is_moe:
+        return "moe"
+    if cfg.local_global_pattern:
+        return "gemma"
+    return "dense"  # incl. vlm (vision prefix handled at embed time)
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if d % 2:
+        out = jnp.pad(out, [(0, 0)] * (out.ndim - 1) + [(0, 1)])
+    return out
+
+
+def _stacked_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+class Model:
+    """Functional model wrapper: all methods are pure (jit/pjit friendly)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.fam = family(cfg)
+        if self.fam in ("gemma", "zamba"):
+            per = (cfg.local_global_pattern + 1 if self.fam == "gemma"
+                   else cfg.shared_attn_every)
+            self.super_len = per
+            self.n_super = cfg.n_layers // per
+            self.n_rem = cfg.n_layers - self.n_super * per
+        elif self.fam == "moe":
+            self.n_dense = cfg.n_dense_layers
+            self.n_moe = cfg.n_layers - self.n_dense
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: dict = {"embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model,
+                                       dtype),
+                   "final_norm": init_norm(cfg, cfg.d_model, dtype)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_linear(keys[1], cfg.d_model, cfg.vocab_size,
+                                       dtype)
+        if cfg.n_vision_tokens:
+            p["vis_proj"] = {
+                "w1": init_linear(keys[2], cfg.vision_embed_dim, cfg.d_model,
+                                  dtype),
+                "w2": init_linear(keys[3], cfg.d_model, cfg.d_model, dtype),
+            }
+        fam = self.fam
+        if fam == "dense":
+            p["stack"] = _stacked_init(
+                lambda k: blocks.init_attn_mlp(k, cfg, dtype), keys[4],
+                cfg.n_layers)
+        elif fam == "gemma":
+            def init_super(k):
+                kl, kg = jax.random.split(k)
+                return {
+                    "local": _stacked_init(
+                        lambda kk: blocks.init_attn_mlp(kk, cfg, dtype), kl,
+                        self.super_len - 1),
+                    "global": blocks.init_attn_mlp(kg, cfg, dtype),
+                }
+            p["super"] = _stacked_init(init_super, keys[4], self.n_super)
+            if self.n_rem:
+                p["rem"] = _stacked_init(
+                    lambda k: blocks.init_attn_mlp(k, cfg, dtype), keys[5],
+                    self.n_rem)
+        elif fam == "moe":
+            if self.n_dense:
+                p["dense0"] = _stacked_init(
+                    lambda k: blocks.init_attn_mlp(k, cfg, dtype), keys[5],
+                    self.n_dense)
+            p["stack"] = _stacked_init(
+                lambda k: blocks.init_attn_moe(k, cfg, dtype), keys[4],
+                self.n_moe)
+        elif fam == "ssm":
+            p["stack"] = _stacked_init(
+                lambda k: blocks.init_ssm_block(k, cfg, dtype), keys[4],
+                cfg.n_layers)
+        elif fam == "zamba":
+            def init_super(k):
+                return {"ssm": _stacked_init(
+                    lambda kk: blocks.init_ssm_block(kk, cfg, dtype), k,
+                    self.super_len)}
+            p["super"] = _stacked_init(init_super, keys[4], self.n_super)
+            p["shared"] = blocks.init_attn_mlp(keys[5], cfg, dtype,
+                                               use_mla=False)
+            if self.n_rem:
+                p["rem"] = _stacked_init(
+                    lambda k: blocks.init_ssm_block(k, cfg, dtype), keys[6],
+                    self.n_rem)
+        elif fam == "whisper":
+            p["enc_stack"] = _stacked_init(
+                lambda k: blocks.init_encoder_block(k, cfg, dtype), keys[4],
+                cfg.n_encoder_layers)
+            p["enc_norm"] = init_norm(cfg, cfg.d_model, dtype)
+            p["stack"] = _stacked_init(
+                lambda k: blocks.init_cross_block(k, cfg, dtype), keys[5],
+                cfg.n_layers)
+        else:
+            raise ValueError(fam)
+        return p
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def _embed(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = embed_fwd(params["embed"], batch["tokens"])
+        if cfg.n_vision_tokens:
+            v = linear_fwd(params["vis_proj"]["w1"], batch["vision_embeds"])
+            v = jax.nn.gelu(v)
+            v = linear_fwd(params["vis_proj"]["w2"], v).astype(x.dtype)
+            x = jnp.concatenate([v, x], axis=1)
+        if cfg.pos_embed == "learned":  # sinusoidal absolute (whisper)
+            S = x.shape[1]
+            x = x + _sinusoid(jnp.arange(S), cfg.d_model).astype(x.dtype)
+        return constrain_batch(x)
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        x = norm_fwd(self.cfg, params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        return linear_fwd(params["lm_head"], x)
+
+    def _encode(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        frames = batch["audio_frames"]
+        x = frames + _sinusoid(jnp.arange(frames.shape[1]),
+                               cfg.d_model).astype(frames.dtype)
+
+        def step(carry, p):
+            return blocks.encoder_fwd(p, cfg, carry), None
+
+        x, _ = jax.lax.scan(step, x, params["enc_stack"])
+        return norm_fwd(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------------
+    # full forward (training / eval)
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, batch: dict, remat: bool = False,
+                train: bool = False,
+                remat_policy: str = "none") -> tuple[jax.Array, jax.Array]:
+        """Returns (logits, moe_aux_loss). ``remat_policy="collectives"``
+        saves the per-block attention/MLP/MoE/SSM outputs (checkpoint_name
+        markers in blocks.py) so the backward pass does NOT recompute the
+        row-parallel all-reduces — §Perf iteration: trades ~2 activations/
+        layer of HBM for a third of the collective wire."""
+        cfg, fam = self.cfg, self.fam
+        aux = jnp.zeros((), jnp.float32)
+        if fam == "whisper":
+            memory = self._encode(params, batch)
+            x = self._embed(params, batch)
+
+            def step(carry, p):
+                return blocks.cross_fwd(p, cfg, carry, memory), None
+
+            body = _remat(step, remat_policy) if remat else step
+            x, _ = jax.lax.scan(body, x, params["stack"])
+            return self._head(params, x), aux
+
+        x = self._embed(params, batch)
+        if fam == "dense":
+            def step(carry, p):
+                return blocks.attn_mlp_fwd(p, cfg, carry,
+                                           window=cfg.sliding_window), None
+            body = _remat(step, remat_policy) if remat else step
+            x, _ = jax.lax.scan(body, x, params["stack"])
+        elif fam == "gemma":
+            def super_step(carry, p):
+                def local_step(c, pl_):
+                    return blocks.attn_mlp_fwd(
+                        pl_, cfg, c, window=cfg.sliding_window), None
+                c, _ = jax.lax.scan(local_step, carry, p["local"])
+                c = blocks.attn_mlp_fwd(p["global"], cfg, c, window=0)
+                return c, None
+            body = _remat(super_step, remat_policy) if remat else super_step
+            x, _ = jax.lax.scan(body, x, params["super"])
+            if self.n_rem:
+                def rem_step(c, pl_):
+                    return blocks.attn_mlp_fwd(
+                        pl_, cfg, c, window=cfg.sliding_window), None
+                x, _ = jax.lax.scan(rem_step, x, params["rem"])
+        elif fam == "moe":
+            if self.n_dense:
+                def d_step(carry, p):
+                    return blocks.attn_mlp_fwd(
+                        p, cfg, carry, window=cfg.sliding_window), None
+                x, _ = jax.lax.scan(d_step, x, params["dense0"])
+
+            def m_step(carry, p):
+                h, a = carry
+                h, ax = blocks.attn_moe_fwd(p, cfg, h,
+                                            window=cfg.sliding_window,
+                                            train=train)
+                return (h, a + ax), None
+            body = _remat(m_step, remat_policy) if remat else m_step
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["stack"])
+        elif fam == "ssm":
+            def step(carry, p):
+                return blocks.ssm_fwd(p, cfg, carry), None
+            body = _remat(step, remat_policy) if remat else step
+            x, _ = jax.lax.scan(body, x, params["stack"])
+        elif fam == "zamba":
+            shared = params["shared"]
+
+            def super_step(carry, p):
+                def s_step(c, ps):
+                    return blocks.ssm_fwd(ps, cfg, c), None
+                c, _ = jax.lax.scan(s_step, carry, p["ssm"])
+                c = blocks.attn_mlp_fwd(shared, cfg, c, window=0)
+                return c, None
+            body = _remat(super_step, remat_policy) if remat else super_step
+            x, _ = jax.lax.scan(body, x, params["super"])
+            if self.n_rem:
+                def r_step(c, ps):
+                    return blocks.ssm_fwd(ps, cfg, c), None
+                x, _ = jax.lax.scan(r_step, x, params["rem"])
+        else:
+            raise ValueError(fam)
+        return self._head(params, x), aux
+
+    # ------------------------------------------------------------------
+    # loss
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch: dict, remat: bool = False,
+             remat_policy: str = "none") -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat, train=True,
+                                   remat_policy=remat_policy)
+        if cfg.n_vision_tokens:
+            logits = logits[:, cfg.n_vision_tokens:]
+        tokens = batch["tokens"]
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = (batch["loss_mask"][:, 1:] if "loss_mask" in batch
+                else jnp.ones_like(tgt)).astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = loss + cfg.router_aux_loss_coef * aux
+        return total, {"nll": loss, "moe_aux": aux,
+                       "tokens": jnp.sum(mask)}
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _stack_zeros(self, proto, n: int):
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), proto)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32) -> Cache:
+        cfg, fam = self.cfg, self.fam
+        mk = functools.partial(blocks.init_block_cache, cfg, batch=batch,
+                               max_len=max_len, dtype=dtype)
+        if fam == "dense":
+            return {"stack": self._stack_zeros(
+                mk("attn", window=cfg.sliding_window), cfg.n_layers)}
+        if fam == "gemma":
+            local = mk("attn", window=cfg.sliding_window)
+            glob = mk("attn", window=0)
+            c = {"super": {
+                "local": self._stack_zeros(
+                    self._stack_zeros(local, self.super_len - 1), self.n_super),
+                "global": self._stack_zeros(glob, self.n_super)}}
+            if self.n_rem:
+                c["rem"] = self._stack_zeros(local, self.n_rem)
+            return c
+        if fam == "moe":
+            kind = "mla" if cfg.mla else "attn"
+            c = {"stack": self._stack_zeros(
+                mk(kind, window=cfg.sliding_window), self.n_moe)}
+            if self.n_dense:
+                c["dense0"] = self._stack_zeros(
+                    mk(kind, window=cfg.sliding_window), self.n_dense)
+            return c
+        if fam == "ssm":
+            return {"stack": self._stack_zeros(mk("ssm"), cfg.n_layers)}
+        if fam == "zamba":
+            c = {"super": {
+                "ssm": self._stack_zeros(
+                    self._stack_zeros(mk("ssm"), self.super_len), self.n_super),
+                "shared": self._stack_zeros(mk("attn"), self.n_super)}}
+            if self.n_rem:
+                c["rem"] = self._stack_zeros(mk("ssm"), self.n_rem)
+            return c
+        if fam == "whisper":
+            return {"stack": self._stack_zeros(mk("cross"), cfg.n_layers)}
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, batch: dict, cache: Cache,
+                logits_at: int = -1) -> tuple[jax.Array, Cache]:
+        """Returns (logits (B, V) at ``logits_at``, filled cache); serving
+        passes the last *real* (pre-padding) prompt position."""
+        cfg, fam = self.cfg, self.fam
+        if fam == "whisper":
+            memory = self._encode(params, batch)
+            x = self._embed(params, batch)
+
+            def step(carry, pc):
+                p, c = pc
+                h, nc = blocks.cross_prefill(p, cfg, carry, memory, c)
+                return h, nc
+
+            x, ncache = jax.lax.scan(step, x, (params["stack"],
+                                               cache["stack"]))
+            return self._head(params, x[:, logits_at]), {"stack": ncache}
+
+        x = self._embed(params, batch)
+        new_cache: dict = {}
+        if fam in ("dense", "moe"):
+            if fam == "moe" and self.n_dense:
+                def d_step(carry, pc):
+                    p, c = pc
+                    h, nc = blocks.attn_mlp_prefill(
+                        p, cfg, carry, c, window=cfg.sliding_window)
+                    return h, nc
+                x, nd = jax.lax.scan(d_step, x, (params["dense0"],
+                                                 cache["dense0"]))
+                new_cache["dense0"] = nd
+            fwd = (blocks.attn_moe_prefill if fam == "moe"
+                   else blocks.attn_mlp_prefill)
+
+            def step(carry, pc):
+                p, c = pc
+                h, nc = fwd(p, cfg, carry, c, window=cfg.sliding_window)
+                return h, nc
+            x, ns = jax.lax.scan(step, x, (params["stack"], cache["stack"]))
+            new_cache["stack"] = ns
+        elif fam == "gemma":
+            def super_step(carry, pc):
+                p, c = pc
+
+                def l_step(cc, plc):
+                    pl_, cl = plc
+                    h, nc = blocks.attn_mlp_prefill(
+                        pl_, cfg, cc, cl, window=cfg.sliding_window)
+                    return h, nc
+                h, nl = jax.lax.scan(l_step, carry, (p["local"], c["local"]))
+                h, ng = blocks.attn_mlp_prefill(p["global"], cfg, h,
+                                                c["global"], window=0)
+                return h, {"local": nl, "global": ng}
+            x, nsuper = jax.lax.scan(super_step, x,
+                                     (params["super"], cache["super"]))
+            new_cache["super"] = nsuper
+            if self.n_rem:
+                def r_step(cc, plc):
+                    pl_, cl = plc
+                    h, nc = blocks.attn_mlp_prefill(
+                        pl_, cfg, cc, cl, window=cfg.sliding_window)
+                    return h, nc
+                x, nr = jax.lax.scan(r_step, x, (params["rem"], cache["rem"]))
+                new_cache["rem"] = nr
+        elif fam == "ssm":
+            def step(carry, p):
+                return blocks.ssm_prefill(p, cfg, carry)
+            x, ns = jax.lax.scan(step, x, params["stack"])
+            new_cache["stack"] = ns
+        elif fam == "zamba":
+            shared = params["shared"]
+
+            def super_step(carry, pc):
+                p, c = pc
+
+                def s_step(cc, ps):
+                    return blocks.ssm_prefill(ps, cfg, cc)
+                h, nssm = jax.lax.scan(s_step, carry, p["ssm"])
+                h, nsh = blocks.attn_mlp_prefill(shared, cfg, h, c["shared"],
+                                                 window=0)
+                return h, {"ssm": nssm, "shared": nsh}
+            x, nsuper = jax.lax.scan(super_step, x,
+                                     (params["super"], cache["super"]))
+            new_cache["super"] = nsuper
+            if self.n_rem:
+                def r_step(cc, ps):
+                    return blocks.ssm_prefill(ps, cfg, cc)
+                x, nr = jax.lax.scan(r_step, x, params["rem"])
+                new_cache["rem"] = nr
+        else:
+            raise ValueError(fam)
+        return self._head(params, x[:, logits_at]), new_cache
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Cache,
+                    pos: jax.Array) -> tuple[jax.Array, Cache]:
+        """tokens: (B, 1); pos: (B,) current absolute positions.
+        Returns (logits (B, V), new cache)."""
+        cfg, fam = self.cfg, self.fam
+        x = embed_fwd(params["embed"], tokens)
+        if cfg.pos_embed == "learned":
+            x = x + _sinusoid(pos[:, None], cfg.d_model).astype(x.dtype)
+        new_cache: dict = {}
+        if fam == "whisper":
+            def step(carry, pc):
+                p, c = pc
+                h, nc = blocks.cross_decode(p, cfg, carry, c, pos)
+                return h, nc
+            x, ns = jax.lax.scan(step, x, (params["stack"], cache["stack"]))
+            return self._head(params, x[:, -1]), {"stack": ns}
+
+        if fam in ("dense", "moe"):
+            if fam == "moe" and self.n_dense:
+                def d_step(carry, pc):
+                    p, c = pc
+                    h, nc = blocks.attn_mlp_decode(p, cfg, carry, c, pos)
+                    return h, nc
+                x, nd = jax.lax.scan(d_step, x, (params["dense0"],
+                                                 cache["dense0"]))
+                new_cache["dense0"] = nd
+            fwd = (blocks.attn_moe_decode if fam == "moe"
+                   else blocks.attn_mlp_decode)
+
+            def step(carry, pc):
+                p, c = pc
+                h, nc = fwd(p, cfg, carry, c, pos)
+                return h, nc
+            x, ns = jax.lax.scan(step, x, (params["stack"], cache["stack"]))
+            new_cache["stack"] = ns
+        elif fam == "gemma":
+            def super_step(carry, pc):
+                p, c = pc
+
+                def l_step(cc, plc):
+                    pl_, cl = plc
+                    return blocks.attn_mlp_decode(pl_, cfg, cc, cl, pos)
+                h, nl = jax.lax.scan(l_step, carry, (p["local"], c["local"]))
+                h, ng = blocks.attn_mlp_decode(p["global"], cfg, h,
+                                               c["global"], pos)
+                return h, {"local": nl, "global": ng}
+            x, nsuper = jax.lax.scan(super_step, x,
+                                     (params["super"], cache["super"]))
+            new_cache["super"] = nsuper
+            if self.n_rem:
+                def r_step(cc, plc):
+                    pl_, cl = plc
+                    return blocks.attn_mlp_decode(pl_, cfg, cc, cl, pos)
+                x, nr = jax.lax.scan(r_step, x, (params["rem"], cache["rem"]))
+                new_cache["rem"] = nr
+        elif fam == "ssm":
+            def step(carry, pc):
+                p, c = pc
+                return blocks.ssm_decode(p, cfg, carry, c, pos)
+            x, ns = jax.lax.scan(step, x, (params["stack"], cache["stack"]))
+            new_cache["stack"] = ns
+        elif fam == "zamba":
+            shared = params["shared"]
+
+            def super_step(carry, pc):
+                p, c = pc
+
+                def s_step(cc, psc):
+                    ps, cs = psc
+                    return blocks.ssm_decode(ps, cfg, cc, cs, pos)
+                h, nssm = jax.lax.scan(s_step, carry, (p["ssm"], c["ssm"]))
+                h, nsh = blocks.attn_mlp_decode(shared, cfg, h, c["shared"],
+                                                pos)
+                return h, {"ssm": nssm, "shared": nsh}
+            x, nsuper = jax.lax.scan(super_step, x,
+                                     (params["super"], cache["super"]))
+            new_cache["super"] = nsuper
+            if self.n_rem:
+                def r_step(cc, psc):
+                    ps, cs = psc
+                    return blocks.ssm_decode(ps, cfg, cc, cs, pos)
+                x, nr = jax.lax.scan(r_step, x, (params["rem"], cache["rem"]))
+                new_cache["rem"] = nr
+        else:
+            raise ValueError(fam)
+        return self._head(params, x[:, -1]), new_cache

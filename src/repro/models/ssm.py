@@ -1,0 +1,129 @@
+"""Mamba2 block (arXiv:2405.21060): conv stem + SSD scan + gated norm.
+
+Layout follows the reference Mamba2 block:
+  in_proj -> [z | x | B | C | dt]; causal depthwise conv over [x|B|C];
+  SSD over ``ssm_n_heads`` heads of width ``ssm_head_dim``; gated RMSNorm
+  (norm(y * silu(z))); out_proj.
+
+Both a full-sequence path (train / prefill, via the SSD chunk kernel) and a
+single-token recurrent path (decode) are provided; they are numerically
+consistent (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.layers import constrain, rmsnorm_fwd, truncated_normal
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_n_heads
+    ng, ds = cfg.ssm_n_groups, cfg.ssm_state
+    conv_dim = di + 2 * ng * ds
+    return di, nh, ng, ds, conv_dim
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, nh, ng, ds, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * ng * ds + nh
+    A = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                   jnp.log(1.0), jnp.log(16.0)))
+    return {
+        "in_proj": truncated_normal(ks[0], (d, d_in_proj), dtype, d ** -0.5),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                   dtype, cfg.ssm_conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.linspace(1e-3, 1e-1, nh), 1e-4))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": truncated_normal(ks[3], (di, d), dtype, di ** -0.5),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, nh, ng, ds, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ng * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. xbc: (B, S, C); w: (K, C). Returns y and the
+    trailing (K-1) inputs as the next conv state."""
+    K = w.shape[0]
+    pad = (jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+           if state is None else state.astype(xbc.dtype))
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(K))
+    y = y + b[None, None]
+    new_state = xp[:, xp.shape[1] - (K - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_fwd(p: dict, cfg: ArchConfig, x: jax.Array,
+               return_cache: bool = False):
+    """x: (B, S, d) -> (B, S, d) [+ cache for subsequent decode]."""
+    B, S, _ = x.shape
+    di, nh, ng, ds, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, B_, C_ = jnp.split(xbc, [di, di + ng * ds], axis=-1)
+    # SSD heads are the tensor-parallel dim (B/C groups replicated, ng=1);
+    # out_proj is the matching row-parallel contraction
+    xs = constrain(xs.reshape(B, S, nh, cfg.ssm_head_dim),
+                   ("pod", "data"), None, "model")
+    B_ = B_.reshape(B, S, ng, ds)
+    C_ = C_.reshape(B, S, ng, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    dt = constrain(dt, ("pod", "data"), None, "model")
+    A = -jnp.exp(p["A_log"])
+    y, final_state = kops.ssd_scan(xs, dt.astype(xs.dtype), A, B_, C_,
+                                   p["D"], chunk=min(cfg.ssm_chunk, S))
+    y = y.reshape(B, S, di)
+    y = rmsnorm_fwd(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_cache:
+        return out, {"conv": conv_state, "state": final_state}
+    return out
+
+
+def mamba2_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                  cache: dict) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d); cache: {conv: (B, K-1, conv_dim), state: (B,nh,hd,ds)}."""
+    B = x.shape[0]
+    di, nh, ng, ds, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   cache["conv"])
+    xs, B_, C_ = jnp.split(xbc[:, 0], [di, di + ng * ds], axis=-1)
+    xs = xs.reshape(B, nh, cfg.ssm_head_dim)
+    B_ = B_.reshape(B, ng, ds)
+    C_ = C_.reshape(B, ng, ds)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    from repro.kernels import ref as kref
+    y, new_state = kref.ssd_decode_step(
+        cache["state"], xs, dt.astype(xs.dtype), A, B_, C_, p["D"])
+    y = y.reshape(B, 1, di)
+    y = rmsnorm_fwd(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "state": new_state}
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di, nh, ng, ds, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), dtype),
+    }

@@ -1,0 +1,5 @@
+from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.pool import ContainerResult, ContainerServingPool
+
+__all__ = ["Completion", "Request", "ServingEngine", "ContainerResult",
+           "ContainerServingPool"]

@@ -1,0 +1,180 @@
+"""Continuous-batching serving engine.
+
+Slot-based: the engine owns a KV cache with ``n_slots`` sequences. Requests
+are prefilled one-at-a-time into a free slot (prompt lengths padded to
+power-of-two buckets to bound recompiles), then all active slots decode in
+lockstep HLO with per-slot positions (the cache/ring masks make ragged
+depths correct — see models/attention.py). Finished slots are refilled from
+the queue mid-decode: continuous batching.
+
+This is the per-container serving loop; core/splitter.py +
+serving/pool.py run n of these over disjoint resource shares — the paper's
+method end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+    prompt_len: int
+    latency_s: float = 0.0
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return n
+
+
+@dataclasses.dataclass
+class _Slot:
+    active: bool = False
+    rid: int = -1
+    pos: int = 0                  # next position to write
+    remaining: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+    started: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, n_slots: int = 4,
+                 max_len: int = 512, dtype=jnp.float32,
+                 greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len, dtype)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self.done: list[Completion] = []
+        self.greedy = greedy
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_cache = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def _pad_ok(self) -> bool:
+        """Right-padding a prompt is harmless only for non-recurrent,
+        non-windowed caches (pad K/V slots stay masked until overwritten;
+        SSM states and ring windows would absorb the garbage)."""
+        cfg = self.model.cfg
+        return not (cfg.is_ssm or cfg.sliding_window > 0)
+
+    def _prefill_fn(self, plen: int, bl: int):
+        key = (plen, bl)
+        if key not in self._prefill_cache:
+            m = self.model
+            nv = m.cfg.n_vision_tokens or 0
+
+            def fn(params, batch):
+                cache = m.init_cache(1, self.max_len)
+                return m.prefill(params, batch, cache,
+                                 logits_at=nv + plen - 1)
+            self._prefill_cache[key] = jax.jit(fn)
+        return self._prefill_cache[key]
+
+    def _insert_cache(self, src_cache: Any, slot: int) -> None:
+        def ins(e, s):
+            ax = next((i for i, (a, b) in enumerate(zip(e.shape, s.shape))
+                       if a != b), None)
+            if ax is None:
+                return s if e.shape == s.shape and e.ndim == 0 else e
+            return jax.lax.dynamic_update_slice_in_dim(
+                e, s.astype(e.dtype), slot, axis=ax)
+        self.cache = jax.tree.map(ins, self.cache, src_cache)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            bl = _bucket(plen) if self._pad_ok else plen
+            padded = np.zeros((1, bl), np.int32)
+            padded[0, :plen] = req.prompt      # right-pad into the bucket
+            batch = {"tokens": jnp.asarray(padded)}
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)[None]
+            logits, src_cache = self._prefill_fn(plen, bl)(self.params, batch)
+            self._insert_cache(src_cache, i)
+            first = self._pick(logits)[0]
+            nv = self.model.cfg.n_vision_tokens or 0
+            slot.active = True
+            slot.rid = req.rid
+            slot.pos = nv + plen               # next write position
+            slot.remaining = req.max_new_tokens - 1
+            slot.generated = [int(first)]
+            slot.started = time.time()
+            if slot.remaining <= 0:
+                self._finish(i)
+
+    def _pick(self, logits: jax.Array) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(sub, logits))
+
+    def _finish(self, i: int) -> None:
+        s = self.slots[i]
+        self.done.append(Completion(s.rid, s.generated, s.pos,
+                                    time.time() - s.started))
+        self.slots[i] = _Slot()
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit new requests, one decode step."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tokens[i, 0] = s.generated[-1]
+                pos[i] = s.pos
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos))
+        nxt = self._pick(logits)
+        for i in active:
+            s = self.slots[i]
+            s.generated.append(int(nxt[i]))
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0 or s.pos >= self.max_len - 1:
+                self._finish(i)
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000) -> list[Completion]:
+        while (self.queue or any(s.active for s in self.slots)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.done

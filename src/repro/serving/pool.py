@@ -1,0 +1,55 @@
+"""Container pool: the paper's method applied to serving.
+
+Splits a batch of independent requests into n segments (core/splitter.py),
+runs one ServingEngine replica per "container", and combines completions in
+request order. On the real pod each replica owns a disjoint sub-mesh
+(core/containers.py); on this CPU host the replicas share the device and
+the pool records per-container wall time so the benchmarks can account
+resource shares explicitly (the multi-process testbed in
+examples/serve_video_detection.py pins real disjoint core sets instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.core import splitter
+from repro.models.model import Model
+from repro.serving.engine import Completion, Request, ServingEngine
+
+
+@dataclasses.dataclass
+class ContainerResult:
+    container_id: int
+    completions: list
+    wall_s: float
+    n_requests: int
+
+
+class ContainerServingPool:
+    def __init__(self, model: Model, params: Any, n_containers: int,
+                 n_slots_per_container: int = 4, max_len: int = 512,
+                 engine_factory: Callable[..., ServingEngine] | None = None):
+        self.n_containers = n_containers
+        factory = engine_factory or ServingEngine
+        self.engines = [
+            factory(model, params, n_slots=n_slots_per_container,
+                    max_len=max_len)
+            for _ in range(n_containers)
+        ]
+
+    def serve(self, requests: list[Request]) -> tuple[list[Completion],
+                                                      list[ContainerResult]]:
+        segments = splitter.split(requests, self.n_containers)
+        results = []
+        for cid, (engine, seg) in enumerate(zip(self.engines, segments)):
+            t0 = time.time()
+            for r in seg:
+                engine.submit(r)
+            comps = engine.run()
+            results.append(ContainerResult(cid, comps, time.time() - t0,
+                                           len(seg)))
+        by_rid = {c.rid: c for r in results for c in r.completions}
+        ordered = [by_rid[r.rid] for r in requests if r.rid in by_rid]
+        return ordered, results

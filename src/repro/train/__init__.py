@@ -1,0 +1,5 @@
+from repro.train.loop import TrainConfig, make_train_step, train
+from repro.train.optimizer import AdamWConfig, apply_update, init_opt_state
+
+__all__ = ["TrainConfig", "make_train_step", "train", "AdamWConfig",
+           "apply_update", "init_opt_state"]

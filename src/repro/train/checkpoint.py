@@ -1,0 +1,55 @@
+"""Flat-npz pytree checkpointing with metadata sidecar."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path if path.endswith(".npz") else path + ".npz")
+    final = path if path.endswith(".npz") else path + ".npz"
+    with open(final + ".meta.json", "w") as f:
+        json.dump(meta or {}, f, indent=2, default=str)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    final = path if path.endswith(".npz") else path + ".npz"
+    with np.load(final) as data:
+        flat = dict(data)
+    paths, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def load_meta(path: str) -> dict:
+    final = path if path.endswith(".npz") else path + ".npz"
+    with open(final + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,92 @@
+"""Training step factory + loop: grad, clip, AdamW, optional remat and
+gradient accumulation (microbatch scan)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, apply_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = False
+    remat_policy: str = "none"   # "none" | "collectives" (save block outs)
+    microbatches: int = 1     # grad accumulation factor
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure; jit/pjit it with the shardings of your mesh."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=tcfg.remat,
+                                   remat_policy=tcfg.remat_policy)
+        return loss, metrics
+
+    def single(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def split(x):
+                return x.reshape(tcfg.microbatches,
+                                 x.shape[0] // tcfg.microbatches, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = single(params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, grads),
+                        acc_l + loss), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, opt_metrics = apply_update(
+            tcfg.opt, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, tcfg: TrainConfig, batches, n_steps: int,
+          params=None, key=None, log_every: int = 10,
+          logger: Callable[[int, dict], None] | None = None):
+    """Single-host CPU training driver (examples/tests). Returns
+    (params, opt_state, history)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = params if params is not None else model.init(key)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    history = []
+    t0 = time.time()
+    for step, batch in enumerate(batches):
+        if step >= n_steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()
+                 if jnp.ndim(v) == 0}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if logger:
+                logger(step, m)
+    return params, opt_state, history

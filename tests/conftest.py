@@ -1,0 +1,45 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device (the 512-placeholder
+override belongs to the dry-run only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, batch: int = 2, seq: int = 16, seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    out = {"tokens": toks}
+    k1, k2 = jax.random.split(key)
+    # random (not constant) frontend stubs: layernorm cancels constant
+    # shifts, which would make "frontend changes logits" tests degenerate
+    if cfg.n_vision_tokens:
+        out["vision_embeds"] = 0.1 * jax.random.normal(
+            k1, (batch, cfg.n_vision_tokens, cfg.vision_embed_dim))
+    if cfg.n_encoder_layers:
+        out["audio_frames"] = 0.1 * jax.random.normal(
+            k2, (batch, cfg.encoder_seq, cfg.d_model))
+    return out
+
+
+@pytest.fixture(scope="session")
+def reduced_models():
+    """Initialised reduced models, shared across the whole session (init is
+    the slow part)."""
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for name in ARCH_NAMES:
+        cfg = get_config(name + "-reduced")
+        model = Model(cfg)
+        out[name] = (model, model.init(key))
+    return out

@@ -1,0 +1,131 @@
+"""Assigned-architecture configs: exact hyper-parameters, param-count sanity
+against the public model sizes, and the long-context applicability matrix."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_NAMES, assigned_pairs, get_config
+
+ASSIGNED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+}
+
+# public parameter counts (±30%: our decoder-backbone scope excludes the
+# stubbed frontends and some model-card details like per-layer biases)
+PUBLIC_PARAMS = {
+    "mamba2-2.7b": 2.7e9,
+    "qwen3-8b": 8.2e9,
+    "qwen3-0.6b": 0.6e9,
+    "stablelm-1.6b": 1.6e9,
+    "mixtral-8x22b": 141e9,
+    "deepseek-v2-lite-16b": 15.7e9,
+    "gemma3-27b": 27e9,
+    "zamba2-7b": 7.4e9,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_assigned_hyperparameters(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.moe_d_ff == ff          # bracket lists the expert width
+    elif ff:
+        assert cfg.d_ff == ff
+
+
+def test_arch_specifics():
+    z = get_config("zamba2-7b")
+    assert z.ssm_state == 64 and z.shared_attn_every == 6
+    m = get_config("mamba2-2.7b")
+    assert m.ssm_state == 128 and m.d_inner == 5120
+    mx = get_config("mixtral-8x22b")
+    assert mx.n_experts == 8 and mx.n_experts_per_tok == 2
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.mla and ds.kv_lora_rank == 512
+    assert ds.n_experts == 64 and ds.n_experts_per_tok == 6
+    assert ds.n_shared_experts == 2
+    g = get_config("gemma3-27b")
+    assert g.local_global_pattern == 5 and g.sliding_window == 1024
+    q = get_config("qwen3-8b")
+    assert q.qk_norm
+    w = get_config("whisper-large-v3")
+    assert w.n_encoder_layers == 32 and w.cross_attention
+    s = get_config("stablelm-1.6b")
+    assert s.partial_rotary_factor == 0.25
+
+
+@pytest.mark.parametrize("arch,target", sorted(PUBLIC_PARAMS.items()))
+def test_param_counts_near_public_sizes(arch, target):
+    n = get_config(arch).param_count()
+    assert 0.7 * target < n < 1.3 * target, (arch, n, target)
+
+
+def test_moe_active_params():
+    mx = get_config("mixtral-8x22b")
+    total, active = mx.param_count(), mx.active_param_count()
+    # Mixtral: ~39B active of ~141B
+    assert 0.2 < active / total < 0.35
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.active_param_count() < 0.35 * ds.param_count()
+
+
+def test_long_context_applicability():
+    """DESIGN.md §Arch-applicability: exactly these five run long_500k."""
+    runs_long = {a for a in ARCH_NAMES if get_config(a).supports_long_decode}
+    assert runs_long == {"mamba2-2.7b", "zamba2-7b", "gemma3-27b",
+                         "mixtral-8x22b", "deepseek-v2-lite-16b"}
+
+
+def test_assigned_pairs_count():
+    pairs = assigned_pairs()
+    assert len(pairs) == 10 * 4 - 5        # 5 documented long_500k skips
+    assert len(INPUT_SHAPES) == 4
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+
+
+def test_extra_arch_one_file_addition():
+    """llama3.1-8b: an architecture beyond the assigned pool is one config
+    file — it must instantiate, forward and stay out of assigned_pairs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import EXTRA_ARCH_NAMES
+    from repro.models.model import Model
+
+    assert "llama3.1-8b" in EXTRA_ARCH_NAMES
+    assert all(a != "llama3.1-8b" for a, _ in assigned_pairs())
+    cfg = get_config("llama3.1-8b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    logits, _ = model.forward(
+        params, {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert logits.shape == (1, 8, cfg.vocab_size)
+    full = get_config("llama3.1-8b")
+    assert 0.7 * 8e9 < full.param_count() < 1.3 * 8e9
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_configs_are_small(arch):
+    cfg = get_config(arch + "-reduced")
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.vocab_size <= 512

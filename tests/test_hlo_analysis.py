@@ -1,0 +1,143 @@
+"""While-aware HLO cost parser unit tests on a handcrafted post-SPMD-style
+module (no jax devices needed)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.hlo_analysis import Collective, analyze_hlo
+
+HLO = """\
+HloModule test_module
+
+%loop_cond (p.0: (s32[], f32[128,256])) -> pred[] {
+  %p.0 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%p.0), index=0
+  %trip = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte, %trip), direction=LT
+}
+
+%loop_body (p.1: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p.1 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %x = f32[128,256]{1,0} get-tuple-element(%p.1), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %mm = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256]{1,0} all-reduce(%mm), replica_groups=[16,16]<=[256], to_apply=%add_comp
+  ROOT %t = (s32[], f32[128,256]) tuple(%ip, %ar)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[128,256]) -> f32[128,256] {
+  %arg = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]) tuple(%zero, %arg)
+  %loop = (s32[], f32[128,256]) while(%init), condition=%loop_cond, body=%loop_body
+  %res = f32[128,256]{1,0} get-tuple-element(%loop), index=1
+  %ag = f32[128,4096]{1,0} all-gather(%res), replica_groups=[16,16]<=[256], dimensions={1}
+  %red = f32[128]{0} reduce(%ag, %zero), dimensions={1}, to_apply=%add_comp
+  ROOT %out = f32[128,256]{1,0} dynamic-slice(%ag, %zero, %zero), dynamic_slice_sizes={128,256}
+}
+"""
+
+
+def test_trip_count_and_dot_flops():
+    cost = analyze_hlo(HLO)
+    assert cost.trip_counts["loop_body"] == 12.0
+    # dot: 2 * 128*256 (result) * 256 (contraction) per iteration
+    dot_flops = 2 * 128 * 256 * 256
+    # reduce in entry: 2 * input elements (128*4096)
+    red_flops = 2 * 128 * 4096
+    assert cost.flops_per_chip == pytest.approx(12 * dot_flops + red_flops)
+
+
+def test_collective_wire_bytes_scaled_by_trips():
+    cost = analyze_hlo(HLO)
+    ar_res = 128 * 256 * 4
+    ar_wire = 2.0 * ar_res * 15 / 16 * 12        # in-loop, 12 trips
+    ag_res = 128 * 4096 * 4
+    ag_wire = ag_res * 15 / 16                   # entry, once
+    assert cost.collectives["all-reduce"] == pytest.approx(ar_wire)
+    assert cost.collectives["all-gather"] == pytest.approx(ag_wire)
+    assert cost.coll_wire_bytes_per_chip == pytest.approx(ar_wire + ag_wire)
+
+
+def test_dynamic_slice_counts_slice_only():
+    cost = analyze_hlo(HLO)
+    # entry bytes: all-gather result + reduce result + 2×slice (+dot ops are
+    # in the loop). The 128×4096 gathered buffer must NOT be charged to the
+    # dynamic-slice op.
+    assert cost.bytes_per_chip < 12 * (3 * 128 * 256 * 4) + 4 * 128 * 4096 * 4
+
+
+def test_participants_iota_format():
+    c = Collective("all-gather", result_bytes=1000, participants=16)
+    assert c.wire_bytes_per_chip == pytest.approx(1000 * 15 / 16)
+    c = Collective("all-reduce", result_bytes=1000, participants=16)
+    assert c.wire_bytes_per_chip == pytest.approx(2 * 1000 * 15 / 16)
+    c = Collective("reduce-scatter", result_bytes=64, participants=16)
+    assert c.wire_bytes_per_chip == pytest.approx(64 * 15)
+    c = Collective("collective-permute", result_bytes=77, participants=2)
+    assert c.wire_bytes_per_chip == 77.0
+
+
+def test_no_entry_raises():
+    with pytest.raises(ValueError):
+        analyze_hlo("HloModule empty\n")
+
+
+def test_nested_scan_multiplicities_multiply():
+    """Nested lax.scan: the inner body's trip count must be outer × inner
+    (the flash-attention q-block × kv-block pattern the roofline depends
+    on)."""
+    import jax
+    import jax.numpy as jnp
+
+    L_OUT, L_IN, N = 5, 3, 32
+
+    def f(ws, x):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=L_IN)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    ws = jnp.zeros((L_OUT, N, N))
+    x = jnp.zeros((4, N))
+    txt = jax.jit(f).lower(ws, x).compile().as_text()
+    cost = analyze_hlo(txt)
+    want = L_OUT * L_IN * 2 * 4 * N * N
+    assert cost.flops_per_chip == pytest.approx(want, rel=0.35), \
+        (cost.flops_per_chip, want)
+    assert max(cost.trip_counts.values()) == L_OUT * L_IN
+
+
+def test_parser_on_real_lowered_module():
+    """End-to-end: jit a scanned matmul on the single CPU device and check
+    the parser finds the trip count and scales the in-loop dot."""
+    import jax
+    import jax.numpy as jnp
+
+    L, N = 7, 64
+
+    def f(ws, x):
+        def step(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(step, x, ws)
+        return y
+
+    ws = jnp.zeros((L, N, N))
+    x = jnp.zeros((8, N))
+    txt = jax.jit(f).lower(ws, x).compile().as_text()
+    cost = analyze_hlo(txt)
+    want = L * 2 * 8 * N * N
+    assert cost.flops_per_chip == pytest.approx(want, rel=0.35), \
+        (cost.flops_per_chip, want)

@@ -1,0 +1,345 @@
+"""Per-kernel validation: Pallas (interpret=True) and the flash-structured
+jnp paths, swept over shapes/dtypes against the pure-jnp oracles in ref.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_ref, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+def _qkv(key, B, Sq, Skv, H, Hkv, K, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, K)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, K)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, K)).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention (Pallas, interpret mode)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Sq,H,Hkv,K", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 128, 4, 2, 64),      # GQA
+    (1, 256, 8, 2, 32),      # more heads, small head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_pallas(B, Sq, H, Hkv, K, dtype, window):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Sq, Sq, H, Hkv, K, dtype)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_softcap():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 128, 128, 4, 4, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=True, softcap=30.0,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 128, 128, 4, 2, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_ref (the jnp flash path used on CPU): values AND grads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,K,causal,window,cap", [
+    (2, 64, 64, 4, 2, 16, True, 0, 0.0),
+    (2, 64, 64, 4, 2, 16, True, 24, 0.0),
+    (1, 48, 48, 2, 2, 8, True, 0, 5.0),
+    (2, 1, 64, 4, 4, 16, True, 0, 0.0),     # decode-style single query
+    (2, 40, 40, 4, 2, 16, False, 0, 0.0),   # non-divisible (padding path)
+])
+def test_flash_ref_matches_oracle(B, Sq, Skv, H, Hkv, K, causal, window, cap):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Sq, Skv, H, Hkv, K, jnp.float32)
+
+    def f1(q, k, v):
+        return flash_ref.flash_attention(q, k, v, causal=causal,
+                                         window=window, softcap=cap,
+                                         block_q=16, block_k=16)
+
+    def f2(q, k, v):
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cap)
+
+    np.testing.assert_allclose(f1(q, k, v), f2(q, k, v), atol=2e-5, rtol=2e-5)
+    g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(f1(*a))), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(f2(*a))), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (Pallas, interpret mode)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,Hkv,K,W", [
+    (2, 4, 2, 64, 256),
+    (1, 8, 8, 32, 512),
+    (3, 4, 1, 64, 128),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_pallas(B, H, Hkv, K, W, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, K)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, W, Hkv, K)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, W, Hkv, K)).astype(dtype)
+    valid = jax.random.bernoulli(ks[3], 0.7, (B, W)).at[:, 0].set(True)
+    got = decode_attention(q, k, v, valid, block_k=128, interpret=True)
+    want = ref.decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,Hkv,K,W", [(2, 4, 2, 64, 256),
+                                         (1, 8, 8, 32, 512)])
+def test_decode_attention_int8_pallas(B, H, Hkv, K, W):
+    """int8 Pallas decode (dequant in VMEM) vs the blocked jnp reference
+    with the same scales."""
+    from repro.kernels.decode_attention import decode_attention_int8
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (B, H, K))
+    kf = jax.random.normal(ks[1], (B, W, Hkv, K))
+    vf = jax.random.normal(ks[2], (B, W, Hkv, K))
+    valid = jax.random.bernoulli(ks[3], 0.7, (B, W)).at[:, 0].set(True)
+
+    def quant(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1) / 127.0, 1e-8)
+        return (jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+                .astype(jnp.int8), scale)
+
+    kq, ksc = quant(kf)
+    vq, vsc = quant(vf)
+    got = decode_attention_int8(q, kq, vq, valid, ksc, vsc, block_k=128,
+                                interpret=True)
+    want = ref.decode_attention_blocked(q, kq, vq, valid, k_scale=ksc,
+                                        v_scale=vsc, block=128)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
+    # and both must be close to the full-precision oracle
+    full = ref.decode_attention(q, kf, vf, valid)
+    np.testing.assert_allclose(got, full, atol=0.08, rtol=0.08)
+
+
+def test_decode_attention_blocked_matches_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    B, H, Hkv, K, W = 2, 4, 2, 32, 300   # non-divisible W (padding path)
+    q = jax.random.normal(ks[0], (B, H, K))
+    kf = jax.random.normal(ks[1], (B, W, Hkv, K))
+    vf = jax.random.normal(ks[2], (B, W, Hkv, K))
+    valid = jax.random.bernoulli(ks[3], 0.6, (B, W)).at[:, 0].set(True)
+    got = ref.decode_attention_blocked(q, kf, vf, valid, block=64)
+    want = ref.decode_attention(q, kf, vf, valid)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_partial_merge_equals_full():
+    """Splitting the cache into S slices, computing partials and merging
+    with the flash-decoding formula must equal the monolithic softmax —
+    the invariant behind the shard_map sequence-parallel decode."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, H, Hkv, K, W, S = 2, 4, 2, 32, 256, 4
+    q = jax.random.normal(ks[0], (B, H, K))
+    kf = jax.random.normal(ks[1], (B, W, Hkv, K))
+    vf = jax.random.normal(ks[2], (B, W, Hkv, K))
+    valid = jax.random.bernoulli(ks[3], 0.7, (B, W)).at[:, 0].set(True)
+    accs, ms, ls = [], [], []
+    for i in range(S):
+        sl = slice(i * W // S, (i + 1) * W // S)
+        a, m, l = ref.decode_attention_partial(q, kf[:, sl], vf[:, sl],
+                                               valid[:, sl])
+        accs.append(a)
+        ms.append(m)
+        ls.append(l)
+    m_tot = jnp.max(jnp.stack(ms), axis=0)
+    w = [jnp.exp(m - m_tot) for m in ms]
+    num = sum(wi[..., None] * a for wi, a in zip(w, accs))
+    den = jnp.maximum(sum(wi * l for wi, l in zip(w, ls)), 1e-30)
+    merged = num / den[..., None]
+    want = ref.decode_attention(q, kf, vf, valid)
+    np.testing.assert_allclose(merged, want, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan: Pallas kernel, sequential jnp path, decode recurrence
+# ---------------------------------------------------------------------------
+def _ssd_inputs(key, B, S, nh, hd, ng, ds, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    B_ = jax.random.normal(ks[3], (B, S, ng, ds)).astype(dtype)
+    C_ = jax.random.normal(ks[4], (B, S, ng, ds)).astype(dtype)
+    D = jnp.ones((nh,))
+    return x, dt, A, B_, C_, D
+
+
+@pytest.mark.parametrize("B,S,nh,hd,ng,ds,chunk", [
+    (2, 128, 4, 16, 2, 16, 32),
+    (1, 64, 8, 8, 1, 32, 16),
+    (2, 256, 2, 32, 1, 8, 64),
+])
+def test_ssd_scan_pallas(B, S, nh, hd, ng, ds, chunk):
+    x, dt, A, B_, C_, D = _ssd_inputs(jax.random.PRNGKey(0), B, S, nh, hd,
+                                      ng, ds)
+    y1, s1 = ssd_scan(x, dt, A, B_, C_, D, chunk=chunk, interpret=True)
+    y2, s2 = ref.ssd_scan(x, dt, A, B_, C_, D, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(s1, s2, atol=5e-5, rtol=5e-5)
+
+
+def test_ssd_scan_seq_matches_oracle():
+    x, dt, A, B_, C_, D = _ssd_inputs(jax.random.PRNGKey(1), 2, 128, 4, 16,
+                                      2, 16)
+    y1, s1 = ref.ssd_scan_seq(x, dt, A, B_, C_, D, chunk=32)
+    y2, s2 = ref.ssd_scan(x, dt, A, B_, C_, D, chunk=32)
+    np.testing.assert_allclose(y1, y2, atol=1e-6)
+    np.testing.assert_allclose(s1, s2, atol=1e-6)
+
+
+def test_ssd_chunk_invariance():
+    """The scan result must not depend on the chunk size."""
+    x, dt, A, B_, C_, D = _ssd_inputs(jax.random.PRNGKey(2), 1, 128, 2, 8,
+                                      1, 8)
+    y16, s16 = ref.ssd_scan(x, dt, A, B_, C_, D, chunk=16)
+    y64, s64 = ref.ssd_scan(x, dt, A, B_, C_, D, chunk=64)
+    np.testing.assert_allclose(y16, y64, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(s16, s64, atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_decode_matches_scan():
+    """Sequential single-token recurrence == chunked scan, step by step."""
+    B, S, nh, hd, ng, ds = 1, 32, 2, 8, 1, 8
+    x, dt, A, B_, C_, D = _ssd_inputs(jax.random.PRNGKey(3), B, S, nh, hd,
+                                      ng, ds)
+    y_all, s_all = ref.ssd_scan(x, dt, A, B_, C_, D, chunk=8)
+    state = jnp.zeros((B, nh, hd, ds))
+    ys = []
+    for t in range(S):
+        y_t, state = ref.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                         B_[:, t], C_[:, t], D)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_seq, y_all, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(state, s_all, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# absorbed-MLA decode kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,r,dr,S,bs", [
+    (2, 4, 64, 16, 256, 64),
+    (1, 8, 128, 32, 512, 128),
+    (3, 2, 32, 8, 128, 128),      # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mla_decode_pallas(B, H, r, dr, S, bs, dtype):
+    from repro.kernels.mla_decode import mla_decode_ctx
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    q_lat = jax.random.normal(ks[0], (B, H, r)).astype(dtype)
+    q_rope = jax.random.normal(ks[1], (B, H, dr)).astype(dtype)
+    ckv = jax.random.normal(ks[2], (B, S, r)).astype(dtype)
+    k_rope = jax.random.normal(ks[3], (B, S, dr)).astype(dtype)
+    valid = jax.random.bernoulli(ks[4], 0.7, (B, S)).at[:, 0].set(True)
+    scale = (r + dr) ** -0.5
+    got = mla_decode_ctx(q_lat, q_rope, ckv, k_rope, valid, scale=scale,
+                         block_s=bs, interpret=True)
+    want = ref.mla_decode_ctx(q_lat, q_rope, ckv, k_rope, valid, scale=scale)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_mla_model_decode_through_pallas_interpret(monkeypatch):
+    """deepseek (MLA) decode through the Pallas kernel in interpret mode
+    matches the jnp path end-to-end."""
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+
+    cfg = get_config("deepseek-v2-lite-16b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 0,
+                              cfg.vocab_size)
+
+    def decode_once():
+        cache = model.init_cache(1, 64)
+        _, cache = model.prefill(params, {"tokens": toks[:, :8]}, cache,
+                                 logits_at=-1)
+        lg, _ = model.decode_step(params, toks[:, 8:9], cache,
+                                  jnp.asarray([8], jnp.int32))
+        return lg
+
+    ref_lg = decode_once()
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    pallas_lg = decode_once()
+    np.testing.assert_allclose(np.asarray(pallas_lg), np.asarray(ref_lg),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_model_decode_through_pallas_interpret(monkeypatch):
+    """End-to-end: a reduced int8-cache model decodes through the Pallas
+    kernels in interpret mode (REPRO_FORCE_PALLAS) and matches the jnp
+    path."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+
+    cfg = dataclasses.replace(get_config("qwen3-0.6b-reduced"),
+                              kv_cache_dtype="int8")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 0,
+                              cfg.vocab_size)
+    def decode_once():
+        cache = model.init_cache(1, 64)
+        _, cache = model.prefill(params, {"tokens": toks[:, :8]}, cache,
+                                 logits_at=-1)
+        lg, _ = model.decode_step(params, toks[:, 8:9], cache,
+                                  jnp.asarray([8], jnp.int32))
+        return lg
+
+    ref_lg = decode_once()
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    pallas_lg = decode_once()
+    np.testing.assert_allclose(np.asarray(pallas_lg), np.asarray(ref_lg),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 96), (2, 37, 64), (1, 5, 3, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    scale = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), shape[-1:])
+    got = rmsnorm(x, scale.astype(dtype), block_rows=8, interpret=True)
+    want = ref.rmsnorm(x, scale.astype(dtype))
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))

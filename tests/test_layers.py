@@ -1,0 +1,103 @@
+"""Layer-primitive properties: rotary embeddings, quantisation, norms,
+sharding-constraint no-op behaviour."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import _quant_kv
+from repro.models.layers import (apply_rope, constrain, constrain_batch,
+                                 layernorm_fwd, rmsnorm_fwd)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]), 10_000.0)
+        kj = apply_rope(k, jnp.asarray([[j]]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(7, 7), rel=1e-4)
+
+
+def test_partial_rope_leaves_tail_untouched():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 2, 64))
+    pos = jnp.arange(4)[None, :]
+    y = apply_rope(x, pos, 10_000.0, partial=0.25)
+    rot = int(64 * 0.25)
+    np.testing.assert_array_equal(np.asarray(x[..., rot:]),
+                                  np.asarray(y[..., rot:]))
+    assert float(jnp.max(jnp.abs(x[..., :rot] - y[..., :rot]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantisation
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4), st.integers(1, 8), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_quant_roundtrip_bounded_error(b, h, scale):
+    x = scale * jax.random.normal(jax.random.PRNGKey(b * 13 + h), (b, h, 32))
+    q, s = _quant_kv(x)
+    deq = q.astype(jnp.float32) * s[..., None]
+    # absmax int8: error per element ≤ scale = rowmax/127
+    err = jnp.max(jnp.abs(deq - x), axis=-1)
+    bound = jnp.max(jnp.abs(x), axis=-1) / 127.0 * 0.51
+    assert bool(jnp.all(err <= bound + 1e-7))
+
+
+def test_quant_zero_row_is_safe():
+    q, s = _quant_kv(jnp.zeros((2, 3, 16)))
+    assert bool(jnp.all(q == 0))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def test_rmsnorm_scale_invariance_property():
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 17))
+    p = {"scale": jnp.ones((17,))}
+    y1 = rmsnorm_fwd(p, x)
+    y2 = rmsnorm_fwd(p, 7.3 * x)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+def test_layernorm_shift_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 17))
+    p = {"scale": jnp.ones((17,)), "bias": jnp.zeros((17,))}
+    y1 = layernorm_fwd(p, x)
+    y2 = layernorm_fwd(p, x + 42.0)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharding constraints degrade to identity off-mesh
+# ---------------------------------------------------------------------------
+def test_constrain_is_identity_without_mesh():
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 16))
+    np.testing.assert_array_equal(np.asarray(constrain(x, "data", "model")),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(constrain_batch(x)),
+                                  np.asarray(x))
+    # and under jit
+    y = jax.jit(lambda a: constrain(a * 2, ("pod", "data")))(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * 2)

@@ -1,0 +1,158 @@
+"""Per-architecture smoke + consistency tests on the reduced configs.
+
+Every assigned architecture: one forward (shape + finiteness), one train
+step (params actually move, loss finite), prefill==forward at the last
+position, and one decode step == full forward on S+1 tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.models.model import Model
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import init_opt_state
+
+from conftest import make_batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch, reduced_models):
+    model, params = reduced_models[arch]
+    cfg = model.cfg
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, aux = model.forward(params, batch)
+    S_out = S + (cfg.n_vision_tokens or 0)
+    assert logits.shape == (B, S_out, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_one_train_step(arch, reduced_models):
+    model, params = reduced_models[arch]
+    batch = make_batch(model.cfg, 2, 16)
+    step = jax.jit(make_train_step(model, TrainConfig()))
+    opt = init_opt_state(params)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params moved (skip zero-size leaves — empty remainder stacks)
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+        if a.size else 0.0,
+        params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_matches_forward(arch, reduced_models):
+    model, params = reduced_models[arch]
+    B, S, ML = 2, 16, 64
+    batch = make_batch(model.cfg, B, S)
+    full, _ = model.forward(params, batch)
+    cache = model.init_cache(B, ML)
+    lg, _ = model.prefill(params, batch, cache, logits_at=-1)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch, reduced_models):
+    model, params = reduced_models[arch]
+    cfg = model.cfg
+    B, S, ML = 2, 16, 64
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (B, S + 2), 0, cfg.vocab_size)
+    batch = make_batch(cfg, B, S)
+    batch["tokens"] = toks[:, :S]
+    cache = model.init_cache(B, ML)
+    _, cache = model.prefill(params, batch, cache, logits_at=-1)
+    nv = cfg.n_vision_tokens or 0
+    # two decode steps, compare the second against the full forward
+    lg = None
+    for t in range(2):
+        pos = jnp.full((B,), nv + S + t, jnp.int32)
+        lg, cache = model.decode_step(params, toks[:, S + t:S + t + 1],
+                                      cache, pos)
+    batch_full = dict(batch, tokens=toks)
+    full, _ = model.forward(params, batch_full)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sliding_window_cache_matches_full_history():
+    """Ring-buffer decode with window W must equal full attention masked to
+    the window (gemma3-style local layer)."""
+    cfg = get_config("gemma3-27b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 80
+    W = cfg.sliding_window
+    assert W < S, "test requires history longer than the window"
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    # max_len covers the full history (the GLOBAL layer's cache needs it);
+    # the local layers' ring stays at the 64-token window
+    cache = model.init_cache(B, 128)
+    _, cache = model.prefill(params, batch, cache, logits_at=-1)
+    lg = None
+    for t in range(4):
+        pos = jnp.full((B,), S + t, jnp.int32)
+        lg, cache = model.decode_step(params, toks[:, S + t:S + t + 1],
+                                      cache, pos)
+    full, _ = model.forward(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_vlm_prefix_changes_logits():
+    cfg = get_config("internvl2-26b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 1, 8)
+    l1, _ = model.forward(params, batch)
+    batch2 = dict(batch,
+                  vision_embeds=batch["vision_embeds"] * 0.0)
+    l2, _ = model.forward(params, batch2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_whisper_encoder_memory_changes_logits():
+    cfg = get_config("whisper-large-v3-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 1, 8)
+    l1, _ = model.forward(params, batch)
+    batch2 = dict(batch, audio_frames=batch["audio_frames"] * -1.0)
+    l2, _ = model.forward(params, batch2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("qwen3-0.6b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16)
+    l1, _ = model.loss(params, batch, remat=False)
+    l2, _ = model.loss(params, batch, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_count_matches_init(arch):
+    """The analytic param_count used by the roofline must match the real
+    initialised tree within 2% (vocab rounding etc.)."""
+    cfg = get_config(arch + "-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_real = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    n_analytic = cfg.param_count()
+    assert abs(n_real - n_analytic) / n_real < 0.02, (n_real, n_analytic)

@@ -1,0 +1,179 @@
+"""Serving engine + container pool integration tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import VideoRequestStream
+from repro.models.model import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.pool import ContainerServingPool
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("qwen3-0.6b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(cfg, n, plen=8, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_engine_completes_all_requests(small_lm):
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    reqs = _requests(model.cfg, 5)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(c.rid for c in done) == list(range(5))
+    for c in done:
+        assert len(c.tokens) == 4
+
+
+def test_engine_greedy_matches_manual_decode(small_lm):
+    """Continuous batching with ragged slots must equal a manual per-request
+    prefill+decode loop."""
+    model, params = small_lm
+    cfg = model.cfg
+    reqs = _requests(cfg, 3, plen=6, max_new=3, seed=1)
+
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    for r in reqs:
+        eng.submit(r)
+    done = {c.rid: c.tokens for c in eng.run()}
+
+    for r in reqs:
+        cache = model.init_cache(1, 64)
+        batch = {"tokens": jnp.asarray(r.prompt)[None]}
+        logits, cache = model.prefill(params, batch, cache,
+                                      logits_at=len(r.prompt) - 1)
+        toks = [int(jnp.argmax(logits, -1)[0])]
+        pos = len(r.prompt)
+        while len(toks) < r.max_new_tokens:
+            lg, cache = model.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+                jnp.asarray([pos], jnp.int32))
+            toks.append(int(jnp.argmax(lg, -1)[0]))
+            pos += 1
+        assert done[r.rid] == toks, r.rid
+
+
+def test_engine_continuous_batching_refills(small_lm):
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=1, max_len=64)
+    reqs = _requests(model.cfg, 4, max_new=2)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 4          # 1 slot served 4 requests sequentially
+
+
+def test_pool_splits_and_preserves_order(small_lm):
+    model, params = small_lm
+    pool = ContainerServingPool(model, params, n_containers=3,
+                                n_slots_per_container=2, max_len=64)
+    reqs = _requests(model.cfg, 7, max_new=2)
+    ordered, per_container = pool.serve(reqs)
+    assert [c.rid for c in ordered] == [r.rid for r in reqs]
+    # paper's equal split: 7 → 3/2/2
+    assert [r.n_requests for r in per_container] == [3, 2, 2]
+
+
+def test_pool_outputs_independent_of_container_count(small_lm):
+    """Splitting is semantically invisible: same completions for n=1, 2, 4
+    (the paper's accuracy-neutrality claim)."""
+    model, params = small_lm
+    reqs = _requests(model.cfg, 4, max_new=3, seed=3)
+    outs = []
+    for n in (1, 2, 4):
+        pool = ContainerServingPool(model, params, n_containers=n,
+                                    n_slots_per_container=2, max_len=64)
+        ordered, _ = pool.serve(list(reqs))
+        outs.append([tuple(c.tokens) for c in ordered])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_ssm_engine_no_padding(small_lm):
+    """SSM caches absorb right-padding, so the engine must prefill SSM
+    prompts unpadded — and completions must still be correct."""
+    cfg = get_config("mamba2-2.7b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    assert not eng._pad_ok
+    reqs = _requests(cfg, 3, plen=5, max_new=3)
+    for r in reqs:
+        eng.submit(r)
+    done = {c.rid: c.tokens for c in eng.run()}
+
+    r = reqs[0]
+    cache = model.init_cache(1, 64)
+    lg, cache = model.prefill(params, {"tokens": jnp.asarray(r.prompt)[None]},
+                              cache, logits_at=len(r.prompt) - 1)
+    toks = [int(jnp.argmax(lg, -1)[0])]
+    pos = len(r.prompt)
+    while len(toks) < 3:
+        lg, cache = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+            jnp.asarray([pos], jnp.int32))
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+        pos += 1
+    assert done[r.rid] == toks
+
+
+def test_engine_max_len_truncates_generation(small_lm):
+    """A request whose generation would overrun the cache is finished at
+    the max_len boundary rather than corrupting the ring."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=1, max_len=16)
+    eng.submit(Request(rid=0,
+                       prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=100))
+    done = eng.run()
+    assert len(done) == 1
+    assert 0 < len(done[0].tokens) <= 16 - 8
+
+
+def test_engine_interleaved_submission(small_lm):
+    """Requests submitted while others are mid-decode (true continuous
+    batching) still complete with the same outputs as batch submission."""
+    model, params = small_lm
+    reqs = _requests(model.cfg, 4, plen=6, max_new=4, seed=5)
+
+    eng1 = ServingEngine(model, params, n_slots=2, max_len=64)
+    for r in reqs:
+        eng1.submit(r)
+    want = {c.rid: c.tokens for c in eng1.run()}
+
+    eng2 = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng2.submit(reqs[0])
+    eng2.step()
+    eng2.submit(reqs[1])
+    eng2.step()
+    eng2.step()
+    eng2.submit(reqs[2])
+    eng2.submit(reqs[3])
+    got = {c.rid: c.tokens for c in eng2.run()}
+    assert got == want
+
+
+def test_video_stream_requests_deterministic():
+    s1 = VideoRequestStream(n_frames=10, seed=42)
+    s2 = VideoRequestStream(n_frames=10, seed=42)
+    np.testing.assert_array_equal(s1.frames(), s2.frames())
+    r1 = s1.prompt_requests(100, 8)
+    r2 = s2.prompt_requests(100, 8)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a, b)

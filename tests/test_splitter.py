@@ -1,0 +1,46 @@
+"""Property tests (hypothesis) for the workload splitter — the paper's
+"divide" step. Invariants: combine∘split == identity, segment sizes differ
+by at most one, segment count is exact."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import splitter
+
+
+@given(st.lists(st.integers(), max_size=200), st.integers(1, 32))
+@settings(max_examples=200, deadline=None)
+def test_split_combine_roundtrip(items, n):
+    segs = splitter.split(items, n)
+    assert splitter.combine(segs) == list(items)
+    assert len(segs) == n
+
+
+@given(st.integers(0, 10_000), st.integers(1, 64))
+@settings(max_examples=200, deadline=None)
+def test_segment_sizes_maximally_equal(n_items, n_segments):
+    sizes = splitter.segment_sizes(n_items, n_segments)
+    assert sum(sizes) == n_items
+    assert len(sizes) == n_segments
+    assert max(sizes) - min(sizes) <= 1
+    # paper: equal split — larger segments come first (deterministic order)
+    assert sizes == sorted(sizes, reverse=True)
+
+
+@given(st.integers(1, 97), st.integers(1, 12), st.integers(0, 3))
+@settings(max_examples=100, deadline=None)
+def test_split_array_roundtrip(n_frames, n_segments, extra_dims)  :
+    shape = (n_frames,) + (2,) * extra_dims
+    x = np.arange(np.prod(shape), dtype=np.float32).reshape(shape)
+    parts = splitter.split_array(x, n_segments)
+    assert len(parts) == n_segments
+    y = splitter.combine_arrays(parts)
+    np.testing.assert_array_equal(x, y)
+
+
+def test_zero_segments_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        splitter.segment_sizes(10, 0)

@@ -1,0 +1,111 @@
+"""Training loop, optimizer, checkpointing, data pipeline."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import LmTokenStream
+from repro.models.model import Model
+from repro.train import checkpoint
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import (AdamWConfig, apply_update, init_opt_state,
+                                   schedule)
+
+
+def test_loss_decreases_over_short_run():
+    cfg = get_config("qwen3-0.6b-reduced")
+    model = Model(cfg)
+    stream = LmTokenStream(cfg.vocab_size, seq_len=32, batch_size=8)
+    tcfg = TrainConfig(opt=AdamWConfig(lr=3e-3, warmup_steps=5,
+                                       total_steps=60))
+    _, _, hist = train(model, tcfg, stream.batches(), n_steps=60,
+                       log_every=59)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first * 0.8, (first, last)
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg = get_config("stablelm-1.6b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                          cfg.vocab_size)}
+    from repro.train.loop import make_train_step
+    opt = init_opt_state(params)
+    p1, _, m1 = jax.jit(make_train_step(model, TrainConfig()))(params, opt,
+                                                               batch)
+    p2, _, m2 = jax.jit(make_train_step(
+        model, TrainConfig(microbatches=2)))(params, opt, batch)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        p1, p2)
+    assert max(jax.tree.leaves(diffs)) < 2e-5
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    end = float(schedule(cfg, jnp.asarray(110)))
+    assert end == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, weight_decay=0.0,
+                      warmup_steps=0)
+    params = {"w": jnp.ones((4, 4))}
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    state = init_opt_state(params)
+    _, state, metrics = apply_update(cfg, params, huge, state)
+    assert float(metrics["grad_norm"]) > 1e5
+    # post-clip first moment is bounded by (1-b1)·clip
+    assert float(jnp.max(jnp.abs(state["m"]["w"]))) <= 0.11
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=1e-2, weight_decay=1.0, warmup_steps=0)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = init_opt_state(params)
+    new, _, _ = apply_update(cfg, params, zeros, state)
+    assert float(jnp.max(new["w"])) < 1.0     # decayed
+    np.testing.assert_allclose(new["b"], params["b"])  # not decayed
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-0.6b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    path = os.path.join(tmp_path, "ck")
+    checkpoint.save(path, params, meta={"step": 17})
+    restored = checkpoint.restore(path, jax.tree.map(
+        lambda a: jnp.zeros_like(a), params))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, restored)
+    assert checkpoint.load_meta(path)["step"] == 17
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    path = os.path.join(tmp_path, "ck2")
+    checkpoint.save(path, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.ones((3, 3))})
+
+
+def test_lm_stream_deterministic_and_shaped():
+    s = LmTokenStream(vocab_size=100, seq_len=32, batch_size=4, seed=9)
+    b1, b2 = s.batch(5), s.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    assert b1["tokens"].max() < 100
+    assert s.batch(6)["tokens"].tolist() != b1["tokens"].tolist()
