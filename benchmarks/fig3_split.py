@@ -63,6 +63,29 @@ def run(quick: bool = False) -> str:
               f"{n_frames} frames)", ""]
     lines += table(["n", "time (norm)", "energy (norm)", "power (norm)",
                     "outputs=="], meas_rows)
+
+    # ---- serving-pool analogue: threads on the shared device (the LM
+    # counterpart of the pinned-process video testbed above)
+    import jax
+
+    from benchmarks import pool_scaling
+    from repro.models.model import Model
+
+    cfg = pool_scaling.bench_config()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = pool_scaling.make_requests(cfg, 8 if quick else 16,
+                                      4 if quick else 8)
+    pool_rows = pool_scaling.measure_pool(model, params, reqs,
+                                          reps=1 if quick else 2)
+    payload["serving_pool"] = pool_rows
+    base_w = pool_rows[0]["wall_seq_s"]
+    lines += ["", "## Serving pool (REAL wall times, threaded engines on "
+              "the shared device)", ""]
+    lines += table(["n", "seq (norm)", "conc (norm)", "speedup"],
+                   [[r["n"], r["wall_seq_s"] / base_w,
+                     r["wall_conc_s"] / base_w, r["speedup"]]
+                    for r in pool_rows])
     return save("fig3_split", payload, lines)
 
 

@@ -2,15 +2,15 @@
 pool.
 
 Serves the same request set with 1, 2 and 4 containers (each container is a
-ServingEngine replica given an equal share of the requests — §V), verifies
-the completions are identical, and reports per-configuration wall time.
+ServingEngine replica given an equal share of the requests — §V), in both
+sequential and concurrent mode, verifies the completions are identical
+everywhere, and reports wall time + the energy proxy per configuration.
 
     PYTHONPATH=src python examples/serve_requests.py [--arch mamba2-2.7b]
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -43,15 +43,18 @@ def main() -> None:
     for n in (1, 2, 4):
         pool = ContainerServingPool(model, params, n_containers=n,
                                     n_slots_per_container=2, max_len=64)
-        t0 = time.time()
-        ordered, per = pool.serve(list(reqs))
-        dt = time.time() - t0
+        pool.serve(list(reqs), concurrent=False)       # compile warmup
+        _, _, w_seq, e_seq = pool.serve_timed(list(reqs), concurrent=False)
+        ordered, per, w_con, e_con = pool.serve_timed(list(reqs),
+                                                      concurrent=True)
         outs = [tuple(c.tokens) for c in ordered]
         if reference is None:
             reference = outs
         match = "✓" if outs == reference else "✗ MISMATCH"
         sizes = [r.n_requests for r in per]
-        print(f"n={n}: wall {dt:6.2f}s  split {sizes}  outputs {match}")
+        print(f"n={n}: seq {w_seq:6.2f}s ~{e_seq:5.1f}J | "
+              f"conc {w_con:6.2f}s ~{e_con:5.1f}J "
+              f"({w_seq/w_con:.2f}x)  split {sizes}  outputs {match}")
     print(f"\n{len(reference)} requests served; sample completion "
           f"(rid=0): {list(reference[0])}")
 

@@ -1,0 +1,67 @@
+"""Shims for jax APIs that moved between releases.
+
+The model/serving code targets the current public surface
+(``jax.sharding.get_abstract_mesh`` / ``jax.set_mesh``); on the 0.4.x
+series those only exist under ``jax._src.mesh``. Centralising the fallback
+here keeps version probes out of the hot paths and gives every caller the
+same contract: ``get_abstract_mesh()`` always returns a mesh object with
+``axis_names`` / ``axis_sizes`` (empty when no mesh is ambient), and
+``set_mesh(mesh)`` is a context manager installing a concrete mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AbstractMesh
+
+if hasattr(jax.sharding, "get_abstract_mesh"):
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    from jax._src import mesh as _mesh_src
+
+    _EMPTY_MESH = AbstractMesh(())
+
+    def get_abstract_mesh() -> AbstractMesh:
+        mesh = _mesh_src.get_abstract_mesh()
+        # unset ambient mesh is a bare () on 0.4.x
+        return mesh if hasattr(mesh, "axis_names") else _EMPTY_MESH
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    import contextlib
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """0.4.x fallback: the internal ``set_mesh`` force-enables the
+        experimental sharding-in-types mode (which lacks rules for gather
+        et al.), so install only the resource env + abstract mesh."""
+        from jax._src.mesh import set_abstract_mesh
+        with mesh, set_abstract_mesh(mesh.abstract_mesh):
+            yield
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs):
+        """New-style ``jax.shard_map`` (ambient-mesh, keyword specs) on top
+        of the 0.4.x experimental API. ``check_rep`` is off: the kernels
+        here merge partial stats themselves, and the old checker rejects
+        some of the collectives they use."""
+        if mesh is None:
+            mesh = get_abstract_mesh()
+        return _shard_map_old(f, mesh, in_specs, out_specs, check_rep=False)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with Auto axis types where the API supports them
+    (newer jax requires them for the sharding-in-types dry-run path)."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+            **kwargs)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)

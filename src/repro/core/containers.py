@@ -58,6 +58,20 @@ def feasible(cfg: ArchConfig, spec: ContainerSpec, hbm_bytes: float = 16e9,
     return need <= hbm_bytes * (1.0 - activation_headroom)
 
 
+def feasible_counts(cfg: ArchConfig, total_chips: int,
+                    hbm_bytes: float = 16e9,
+                    max_containers: int | None = None,
+                    activation_headroom: float = 0.35,
+                    extra_bytes_per_chip: float = 0.0) -> list[int]:
+    """Container counts the online scheduler may search: the power-of-two
+    factorisations of the pod whose per-chip weight shard (+headroom) fits
+    — the memory bound that capped the paper's TX2 at 6 containers."""
+    return [s.n_containers
+            for s in factorizations(total_chips, max_containers)
+            if feasible(cfg, s, hbm_bytes, activation_headroom,
+                        extra_bytes_per_chip)]
+
+
 def container_mesh(spec: ContainerSpec,
                    axis_names: tuple[str, str] = ("data", "model")):
     """Build the jax mesh for a factorisation (requires enough devices —

@@ -78,6 +78,25 @@ def _first_shape(shape_str: str):
     return dt, dims_l
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an operand list on top-level commas only — operands may carry
+    inline types (``f32[4,32]{1,0} %x``) whose brackets contain commas."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o for o in out if o]
+
+
 @dataclasses.dataclass
 class Collective:
     kind: str
@@ -171,15 +190,20 @@ def _parse_computation(name: str, entry: bool, lines: list[str]) -> Computation:
         # counts each buffer once per consumer.
         type_str = rhs[:rhs.find(opcode)] if opcode in rhs else rhs
         res_bytes = _shape_bytes(type_str)
-        operand_sizes = []
+
+        def _operand_type(tok: str) -> str:
+            """Type string of one operand token: inline if present (newer
+            XLA prints ``f32[...]{...} %name``), else the defining line."""
+            if _SHAPE_RE.search(tok.split("%")[0]):
+                return tok.split("%")[0]
+            nm = re.search(r"%?([\w\.\-]+)", tok)
+            t = symtab.get(nm.group(1), "") if nm else ""
+            return t[:t.find("(")] if "(" in t else t
+
         oper_m = re.search(re.escape(opcode) + r"\(([^)]*)\)", rhs)
-        if oper_m:
-            for op in oper_m.group(1).split(","):
-                op = op.strip().lstrip("%")
-                if op in symtab:
-                    t = symtab[op]
-                    operand_sizes.append(_shape_bytes(
-                        t[:t.find("(")] if "(" in t else t))
+        operands = _split_operands(oper_m.group(1)) if oper_m else []
+        operand_sizes = [_shape_bytes(t)
+                         for t in map(_operand_type, operands) if t]
         # dynamic-update-slice writes ONE slice into an aliased buffer (XLA
         # updates in place): drop the buffer-sized operand and the full-size
         # result, keep 2× the update slice. dynamic-slice likewise reads a
@@ -217,10 +241,8 @@ def _parse_computation(name: str, entry: bool, lines: list[str]) -> Computation:
         # ---- reduce FLOPs (matvecs lower to fused multiply+reduce on CPU;
         # 2×input-elements ≈ the multiply-add count)
         if opcode == "reduce":
-            if oper_m:
-                first = oper_m.group(1).split(",")[0].strip().lstrip("%")
-                t = symtab.get(first, "")
-                _, in_dims = _first_shape(t[:t.find("(")] if "(" in t else t)
+            if operands:
+                _, in_dims = _first_shape(_operand_type(operands[0]))
                 n = 1
                 for d in in_dims:
                     n *= d
@@ -230,10 +252,8 @@ def _parse_computation(name: str, entry: bool, lines: list[str]) -> Computation:
             dt, res_dims = _first_shape(type_str)
             k = 1
             cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
-            if cd and oper_m:
-                lhs_name = oper_m.group(1).split(",")[0].strip().lstrip("%")
-                lhs_t = symtab.get(lhs_name, "")
-                _, lhs_dims = _first_shape(lhs_t)
+            if cd and operands:
+                _, lhs_dims = _first_shape(_operand_type(operands[0]))
                 for di in cd.group(1).split(","):
                     if di and int(di) < len(lhs_dims):
                         k *= lhs_dims[int(di)]

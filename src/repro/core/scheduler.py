@@ -120,6 +120,20 @@ class DivideAndSaveScheduler:
                          key=lambda n: float(self.time_model(n)))
         return best_n
 
+    def best(self) -> int:
+        """Exploitation-only choice: the fitted argmin when models exist,
+        else the best observed mean, else the smallest feasible count.
+        Unlike ``pick()`` this never explores — it is what a converged
+        deployment runs, and what the adaptive pool reports as its answer."""
+        if self.time_model is not None and self.energy_model is not None:
+            return self._argmin()
+        metric = "time_s" if self.objective == "time" else "energy_j"
+        means = {n: self._observed_mean(n, metric) for n in self.feasible}
+        means = {n: v for n, v in means.items() if v is not None}
+        if means:
+            return min(means, key=means.get)
+        return self.feasible[0]
+
     # ------------------------------------------------------------------
     @property
     def n_observations(self) -> int:

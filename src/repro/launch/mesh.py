@@ -2,7 +2,7 @@
 jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,17 +11,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     across the inter-pod (DCN-ish) boundary."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_container_mesh(total_chips: int, n_containers: int):
     """The paper's factorisation: n containers × (chips/n) model shards.
     The "data" axis is the container axis (weights replicated across it)."""
     assert total_chips % n_containers == 0
-    return jax.make_mesh(
-        (n_containers, total_chips // n_containers), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh(
+        (n_containers, total_chips // n_containers), ("data", "model"))
 
 
 def mesh_axis_size(mesh, name: str) -> int:

@@ -1,24 +1,27 @@
-"""Serving launcher: container-pool serving of a synthetic request stream.
+"""Serving launcher: concurrent container-pool serving of a synthetic
+request stream, with the online divide-and-save scheduler.
 
-The pod analogue runs one ServingEngine per container sub-mesh; on this CPU
-host the pool shares the device but keeps the same splitting semantics.
+Fixed count: one concurrent pool. ``--containers 0`` (default) runs the
+adaptive loop — waves of traffic, each served at the scheduler's current
+pick within the memory-feasible counts, each observation refining the
+fitted time/energy models.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --containers 4 --requests 16
+    PYTHONPATH=src python -m repro.launch.serve --waves 8 --objective time
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
-from repro.core.scheduler import DivideAndSaveScheduler
+from repro.core.containers import feasible_counts
 from repro.models.model import Model
-from repro.serving.engine import Request
-from repro.serving.pool import ContainerServingPool
+from repro.serving import (AdaptiveServingPool, ContainerServingPool,
+                           Request)
 
 
 def main() -> None:
@@ -29,6 +32,14 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--waves", type=int, default=6,
+                    help="traffic waves in adaptive mode")
+    ap.add_argument("--objective", default="energy",
+                    choices=("energy", "time"))
+    ap.add_argument("--sequential", action="store_true",
+                    help="disable container concurrency (baseline)")
+    ap.add_argument("--units", type=int, default=8,
+                    help="resource units to factorise (cores / chips)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
@@ -45,29 +56,35 @@ def main() -> None:
 
     if args.containers:
         pool = ContainerServingPool(model, params, args.containers,
-                                    n_slots_per_container=args.slots)
-        t0 = time.time()
-        done, per = pool.serve(batch_of_requests(0))
-        dt = time.time() - t0
+                                    n_slots_per_container=args.slots,
+                                    concurrent=not args.sequential)
+        done, per, wall, energy = pool.serve_timed(batch_of_requests(0))
         toks = sum(len(c.tokens) for c in done)
-        print(f"n={args.containers}: {len(done)} requests, {toks} tokens "
-              f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+        mode = "sequential" if args.sequential else "concurrent"
+        print(f"n={args.containers} ({mode}): {len(done)} requests, "
+              f"{toks} tokens in {wall:.2f}s ({toks/wall:.1f} tok/s, "
+              f"~{energy:.1f}J)")
+        for r in per:
+            print(f"  container {r.container_id}: {r.n_requests} reqs "
+                  f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
+                  f"~{r.energy_j:.1f}J")
         return
 
-    # online mode: the scheduler probes container counts across job batches
-    feasible = [1, 2, 4]
-    sched = DivideAndSaveScheduler(feasible, objective="energy", epsilon=0.2)
-    for job in range(6):
-        n = sched.pick()
-        pool = ContainerServingPool(model, params, n,
-                                    n_slots_per_container=args.slots)
-        t0 = time.time()
-        done, _ = pool.serve(batch_of_requests(job * args.requests))
-        dt = time.time() - t0
-        energy = dt * (40.0 + 3.5 * min(8, n * 2))   # activity model
-        sched.observe(n, dt, energy)
-        print(f"job {job}: n={n} wall {dt:.2f}s energy {energy:.1f}J")
-    print("scheduler summary:", sched.summary())
+    # online mode: the scheduler probes container counts across waves,
+    # bounded by the memory-feasible factorisations of the host
+    feasible = feasible_counts(cfg, args.units) or [1]
+    apool = AdaptiveServingPool(model, params, feasible,
+                                objective=args.objective, epsilon=0.2,
+                                n_slots_per_container=args.slots,
+                                concurrent=not args.sequential)
+    for wave in range(args.waves):
+        apool.serve_wave(batch_of_requests(wave * args.requests))
+        w = apool.history[-1]
+        print(f"wave {w.wave}: n={w.n_containers} wall {w.wall_s:.2f}s "
+              f"energy {w.energy_j:.1f}J")
+    print(f"feasible counts: {feasible}")
+    print(f"converged choice: n={apool.choice}")
+    print("scheduler summary:", apool.scheduler.summary())
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh, set_mesh
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.data.pipeline import LmTokenStream
 from repro.launch.sharding import ShardingRules
@@ -29,8 +30,7 @@ def make_mesh_from_devices():
     n = jax.device_count()
     data = max(1, n // 2) if n > 1 else 1
     model_ax = n // data
-    return jax.make_mesh((data, model_ax), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_ax), ("data", "model"))
 
 
 def main() -> None:
@@ -62,7 +62,7 @@ def main() -> None:
     stream = LmTokenStream(cfg.vocab_size, seq_len=args.seq,
                            batch_size=args.batch)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(
             lambda k: model.init(k),
             out_shardings=rules.params(jax.eval_shape(

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import get_abstract_mesh
 from repro.configs.base import ArchConfig
 
 
@@ -24,7 +25,7 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
     ambient mesh or don't divide the corresponding dim. ``spec`` entries are
     axis names, tuples of names, or None — one per array dim (trailing dims
     may be omitted)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if not mesh.axis_names:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

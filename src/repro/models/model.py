@@ -349,10 +349,21 @@ class Model:
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
+    @staticmethod
+    def _sel(x: jax.Array, logits_at) -> jax.Array:
+        """Select the hidden state the head runs on: a shared position
+        (int) or one position per sequence ((B,) array — bucket-batched
+        prefill, where same-bucket prompts have different real lengths)."""
+        if isinstance(logits_at, int):
+            return x[:, logits_at]
+        idx = jnp.asarray(logits_at, jnp.int32)
+        return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
     def prefill(self, params: Params, batch: dict, cache: Cache,
-                logits_at: int = -1) -> tuple[jax.Array, Cache]:
+                logits_at: int | jax.Array = -1) -> tuple[jax.Array, Cache]:
         """Returns (logits (B, V) at ``logits_at``, filled cache); serving
-        passes the last *real* (pre-padding) prompt position."""
+        passes the last *real* (pre-padding) prompt position — scalar, or
+        per-sequence (B,) when a padded bucket batches ragged prompts."""
         cfg, fam = self.cfg, self.fam
         if fam == "whisper":
             memory = self._encode(params, batch)
@@ -365,7 +376,7 @@ class Model:
 
             x, ncache = jax.lax.scan(step, x, (params["stack"],
                                                cache["stack"]))
-            return self._head(params, x[:, logits_at]), {"stack": ncache}
+            return self._head(params, self._sel(x, logits_at)), {"stack": ncache}
 
         x = self._embed(params, batch)
         new_cache: dict = {}
@@ -439,7 +450,7 @@ class Model:
                 new_cache["rem"] = nr
         else:
             raise ValueError(fam)
-        return self._head(params, x[:, logits_at]), new_cache
+        return self._head(params, self._sel(x, logits_at)), new_cache
 
     # ------------------------------------------------------------------
     # decode

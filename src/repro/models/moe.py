@@ -18,13 +18,14 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, shard_map
 from repro.configs.base import ArchConfig
 from repro.models.layers import constrain, init_mlp, mlp_fwd, truncated_normal
 
 
 def _mesh_info():
     """(data_axes, data_size, model_size) of the ambient mesh (if any)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if not mesh.axis_names:
         return (), 1, 1
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -133,7 +134,7 @@ def _dispatch_shard_map(experts: dict, cfg: ArchConfig, xt: jax.Array,
     else:  # ff dim sharded: (E, d, ff) for up/gate, (E, ff, d) for down
         wspec = {k: (P(None, "model") if k == "w_down"
                      else P(None, None, "model")) for k in experts}
-    out = jax.shard_map(
+    out = shard_map(
         region,
         in_specs=(wspec, dspec, dspec, dspec, dspec, dspec),
         out_specs=dspec)(experts, safe_e, safe_pos, keep, gates, tok_rep)

@@ -1,5 +1,10 @@
+from repro.serving.adaptive import (AdaptiveServingPool,
+                                    SyntheticContainerPool, WaveResult,
+                                    synthetic_pool_factory)
 from repro.serving.engine import Completion, Request, ServingEngine
-from repro.serving.pool import ContainerResult, ContainerServingPool
+from repro.serving.pool import (ContainerResult, ContainerServingPool,
+                                EnergyProxy)
 
 __all__ = ["Completion", "Request", "ServingEngine", "ContainerResult",
-           "ContainerServingPool"]
+           "ContainerServingPool", "EnergyProxy", "AdaptiveServingPool",
+           "SyntheticContainerPool", "WaveResult", "synthetic_pool_factory"]

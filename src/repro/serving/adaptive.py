@@ -1,0 +1,125 @@
+"""Adaptive serving: the paper's online scheduler closed over the pool.
+
+The paper's conclusion calls for "energy-efficient job schedulers that
+split input data, obtaining the optimal number of containers in an online
+fashion". ``AdaptiveServingPool`` is that loop: traffic arrives in waves;
+each wave is served by a ``ContainerServingPool`` factored to the count the
+``DivideAndSaveScheduler`` picked, the wave's measured ``(n, wall, energy)``
+lands back in the scheduler, and the next wave is re-factored to the new
+``pick()`` — restricted to the feasible counts from ``core/containers.py``
+(memory bounds the factorisation search, as it capped the paper's TX2 at 6
+containers).
+
+Pools are cached per count, so converging traffic stops paying refactor
+cost: once the scheduler settles, every wave reuses the same engines and
+their compiled executables.
+
+``SyntheticContainerPool`` is the simulator counterpart (paper §VI): a
+pool whose time/energy come from closed-form profiles instead of a device,
+used to exercise the scheduler loop deterministically in tests and in
+``benchmarks/pool_scaling.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+from repro.core.scheduler import DivideAndSaveScheduler, Objective
+from repro.models.model import Model
+from repro.serving.engine import Completion, Request
+from repro.serving.pool import ContainerResult, ContainerServingPool
+
+
+@dataclasses.dataclass
+class WaveResult:
+    wave: int
+    n_containers: int
+    wall_s: float
+    energy_j: float
+    n_requests: int
+
+
+class AdaptiveServingPool:
+    """Serve waves of requests, learning the optimal container count."""
+
+    def __init__(self, model: Model | None, params: Any,
+                 feasible_counts: Sequence[int],
+                 objective: Objective = "energy",
+                 deadline_s: float | None = None,
+                 epsilon: float = 0.0, seed: int = 0,
+                 n_slots_per_container: int = 4, max_len: int = 512,
+                 concurrent: bool = True,
+                 scheduler: DivideAndSaveScheduler | None = None,
+                 pool_factory: Callable[[int], Any] | None = None):
+        self.scheduler = scheduler or DivideAndSaveScheduler(
+            list(feasible_counts), objective=objective,
+            deadline_s=deadline_s, epsilon=epsilon, seed=seed)
+        if pool_factory is None:
+            if model is None:
+                raise ValueError("need a model or a pool_factory")
+
+            def pool_factory(n: int) -> ContainerServingPool:
+                return ContainerServingPool(
+                    model, params, n,
+                    n_slots_per_container=n_slots_per_container,
+                    max_len=max_len, concurrent=concurrent)
+        self._pool_factory = pool_factory
+        self._pools: dict[int, Any] = {}
+        self.history: list[WaveResult] = []
+
+    def _pool(self, n: int):
+        if n not in self._pools:
+            self._pools[n] = self._pool_factory(n)
+        return self._pools[n]
+
+    def serve_wave(self, requests: list[Request]) -> list[Completion]:
+        n = self.scheduler.pick()
+        ordered, _, wall, energy = self._pool(n).serve_timed(requests)
+        self.scheduler.observe(n, wall, energy)
+        self.history.append(WaveResult(len(self.history), n, wall, energy,
+                                       len(requests)))
+        return ordered
+
+    def serve(self, waves) -> list[list[Completion]]:
+        return [self.serve_wave(w) for w in waves]
+
+    @property
+    def choice(self) -> int:
+        """Current exploitation-only choice (what a converged deployment
+        would run)."""
+        return self.scheduler.best()
+
+
+class SyntheticContainerPool:
+    """Pool stand-in with closed-form time/energy profiles (§VI-style
+    simulation). ``serve_timed`` echoes the requests as empty completions
+    and reports ``time_fn(n)`` / ``energy_fn(n)`` — deterministic input for
+    scheduler-loop experiments."""
+
+    def __init__(self, n_containers: int,
+                 time_fn: Callable[[int], float],
+                 energy_fn: Callable[[int], float] | None = None):
+        self.n_containers = n_containers
+        self._time_fn = time_fn
+        self._energy_fn = energy_fn or (lambda n: time_fn(n) * 40.0)
+
+    def serve_timed(self, requests: list[Request]
+                    ) -> tuple[list[Completion], list[ContainerResult],
+                               float, float]:
+        n = self.n_containers
+        wall = float(self._time_fn(n))
+        energy = float(self._energy_fn(n))
+        ordered = [Completion(r.rid, [], len(r.prompt)) for r in requests]
+        per = [ContainerResult(cid, [], wall, 0, wall, energy / n)
+               for cid in range(n)]
+        return ordered, per, wall, energy
+
+    def serve(self, requests):
+        ordered, per, _, _ = self.serve_timed(requests)
+        return ordered, per
+
+
+def synthetic_pool_factory(time_fn: Callable[[int], float],
+                           energy_fn: Callable[[int], float] | None = None
+                           ) -> Callable[[int], SyntheticContainerPool]:
+    return lambda n: SyntheticContainerPool(n, time_fn, energy_fn)

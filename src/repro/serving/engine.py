@@ -1,11 +1,25 @@
 """Continuous-batching serving engine.
 
-Slot-based: the engine owns a KV cache with ``n_slots`` sequences. Requests
-are prefilled one-at-a-time into a free slot (prompt lengths padded to
-power-of-two buckets to bound recompiles), then all active slots decode in
-lockstep HLO with per-slot positions (the cache/ring masks make ragged
-depths correct — see models/attention.py). Finished slots are refilled from
-the queue mid-decode: continuous batching.
+Slot-based: the engine owns a KV cache with ``n_slots`` sequences. Queued
+requests are admitted with **batched bucket admission**: all waiting
+prompts that fall in the same padded-length bucket (up to the number of
+free slots) are prefilled in ONE compiled call — per-row ``logits_at``
+indices make ragged real lengths inside a bucket exact — then all active
+slots decode in lockstep HLO with per-slot positions (the cache/ring masks
+make ragged depths correct — see models/attention.py). Finished slots are
+refilled from the queue mid-decode: continuous batching.
+
+The engine is step-driven and non-blocking at the scheduling level:
+``step()`` performs at most one admission round plus one decode step and
+returns whether work remains, so a pool can interleave many engines (one
+per container) from worker threads — jax releases the GIL during device
+dispatch, which is what makes the concurrent container pool in
+serving/pool.py actually overlap. ``busy_s`` accumulates the wall time the
+engine spent inside ``step()`` and feeds the pool's energy proxy.
+
+Engines sharing one ``Model`` share jitted prefill/decode executables
+(module-level cache) so an n-container pool compiles each shape once, not
+n times.
 
 This is the per-container serving loop; core/splitter.py +
 serving/pool.py run n of these over disjoint resource shares — the paper's
@@ -15,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from collections import deque
 from typing import Any
 
@@ -58,10 +73,24 @@ class _Slot:
     started: float = 0.0
 
 
+# jitted executables shared by every engine built on the same Model —
+# populated lazily, keyed by (kind, *static shape info)
+_JIT_CACHE: "weakref.WeakKeyDictionary[Model, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _shared_jits(model: Model) -> dict:
+    cache = _JIT_CACHE.get(model)
+    if cache is None:
+        cache = _JIT_CACHE.setdefault(model, {})
+    return cache
+
+
 class ServingEngine:
     def __init__(self, model: Model, params: Any, n_slots: int = 4,
                  max_len: int = 512, dtype=jnp.float32,
-                 greedy: bool = True, seed: int = 0):
+                 greedy: bool = True, seed: int = 0,
+                 batch_admit: bool = True):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -71,14 +100,35 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.done: list[Completion] = []
         self.greedy = greedy
+        self.batch_admit = batch_admit
         self._key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(model.decode_step)
-        self._prefill_cache = {}
+        self._jits = _shared_jits(model)
+        if "decode" not in self._jits:
+            self._jits["decode"] = jax.jit(model.decode_step)
+        self._decode = self._jits["decode"]
+        # which axis of each cache leaf is the batch/slot axis (None for
+        # scalar or batch-free leaves) — inferred once from shape structs so
+        # row insertion never has to guess from runtime shapes (which is
+        # ambiguous when a prefill batch happens to equal n_slots)
+        one = jax.eval_shape(lambda: model.init_cache(1, max_len, dtype))
+        two = jax.eval_shape(lambda: model.init_cache(2, max_len, dtype))
+        self._batch_axes = jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in
+                               enumerate(zip(a.shape, b.shape)) if x != y),
+                              None), one, two)
         self.steps = 0
+        self.busy_s = 0.0         # wall time spent inside step()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def submit_many(self, reqs) -> None:
+        self.queue.extend(reqs)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
 
     @property
     def _pad_ok(self) -> bool:
@@ -88,51 +138,87 @@ class ServingEngine:
         cfg = self.model.cfg
         return not (cfg.is_ssm or cfg.sliding_window > 0)
 
-    def _prefill_fn(self, plen: int, bl: int):
-        key = (plen, bl)
-        if key not in self._prefill_cache:
-            m = self.model
-            nv = m.cfg.n_vision_tokens or 0
+    def _prefill_fn(self, n_seqs: int, bl: int):
+        key = ("prefill", n_seqs, bl, self.max_len)
+        if key not in self._jits:
+            m, ml = self.model, self.max_len
 
-            def fn(params, batch):
-                cache = m.init_cache(1, self.max_len)
-                return m.prefill(params, batch, cache,
-                                 logits_at=nv + plen - 1)
-            self._prefill_cache[key] = jax.jit(fn)
-        return self._prefill_cache[key]
+            def fn(params, batch, logits_idx):
+                cache = m.init_cache(n_seqs, ml)
+                return m.prefill(params, batch, cache, logits_at=logits_idx)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
 
-    def _insert_cache(self, src_cache: Any, slot: int) -> None:
-        def ins(e, s):
-            ax = next((i for i, (a, b) in enumerate(zip(e.shape, s.shape))
-                       if a != b), None)
+    def _insert_rows(self, src_cache: Any, slot_ids: list[int]) -> None:
+        """Scatter prefill cache rows into their slots (any slot set, any
+        batch size — including a full batch of n_slots rows)."""
+        idx = jnp.asarray(slot_ids)
+
+        def ins(e, s, ax):
             if ax is None:
-                return s if e.shape == s.shape and e.ndim == 0 else e
-            return jax.lax.dynamic_update_slice_in_dim(
-                e, s.astype(e.dtype), slot, axis=ax)
-        self.cache = jax.tree.map(ins, self.cache, src_cache)
+                return e
+            em = jnp.moveaxis(e, ax, 0)
+            sm = jnp.moveaxis(s.astype(e.dtype), ax, 0)
+            return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
+        self.cache = jax.tree.map(ins, self.cache, src_cache,
+                                  self._batch_axes)
+
+    # ------------------------------------------------------------------
+    def _admit_key(self, req: Request):
+        """Requests sharing a key can prefill as one padded batch."""
+        plen = len(req.prompt)
+        bl = _bucket(plen) if self._pad_ok else plen
+        return (bl, tuple(sorted(req.extras)))
+
+    def _take_bucket(self, n_free: int) -> list[Request]:
+        """Pop the head request plus every queued request in its bucket
+        (preserving queue order of the rest), up to ``n_free``."""
+        key = self._admit_key(self.queue[0])
+        take: list[Request] = []
+        rest: deque[Request] = deque()
+        while self.queue and len(take) < n_free:
+            r = self.queue.popleft()
+            (take if self._admit_key(r) == key else rest).append(r)
+        rest.extend(self.queue)
+        self.queue = rest
+        return take
 
     def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot.active or not self.queue:
-                continue
-            req = self.queue.popleft()
-            plen = len(req.prompt)
-            bl = _bucket(plen) if self._pad_ok else plen
-            padded = np.zeros((1, bl), np.int32)
-            padded[0, :plen] = req.prompt      # right-pad into the bucket
-            batch = {"tokens": jnp.asarray(padded)}
-            for k, v in req.extras.items():
-                batch[k] = jnp.asarray(v)[None]
-            logits, src_cache = self._prefill_fn(plen, bl)(self.params, batch)
-            self._insert_cache(src_cache, i)
-            first = self._pick(logits)[0]
-            nv = self.model.cfg.n_vision_tokens or 0
+        free = [i for i, s in enumerate(self.slots) if not s.active]
+        while free and self.queue:
+            reqs = (self._take_bucket(len(free)) if self.batch_admit
+                    else [self.queue.popleft()])
+            slot_ids = [free.pop(0) for _ in reqs]
+            self._admit_batch(slot_ids, reqs)
+
+    def _admit_batch(self, slot_ids: list[int],
+                     reqs: list[Request]) -> None:
+        n = len(reqs)
+        bl, _ = self._admit_key(reqs[0])
+        nv = self.model.cfg.n_vision_tokens or 0
+        padded = np.zeros((n, bl), np.int32)
+        logits_idx = np.zeros((n,), np.int32)
+        for j, r in enumerate(reqs):
+            plen = len(r.prompt)
+            padded[j, :plen] = r.prompt       # right-pad into the bucket
+            logits_idx[j] = nv + plen - 1
+        batch = {"tokens": jnp.asarray(padded)}
+        for k in reqs[0].extras:
+            batch[k] = jnp.asarray(np.stack([np.asarray(r.extras[k])
+                                             for r in reqs]))
+        logits, src_cache = self._prefill_fn(n, bl)(
+            self.params, batch, jnp.asarray(logits_idx))
+        self._insert_rows(src_cache, slot_ids)
+        first = self._pick(logits)
+        now = time.time()
+        for j, (i, r) in enumerate(zip(slot_ids, reqs)):
+            slot = self.slots[i]
             slot.active = True
-            slot.rid = req.rid
-            slot.pos = nv + plen               # next write position
-            slot.remaining = req.max_new_tokens - 1
-            slot.generated = [int(first)]
-            slot.started = time.time()
+            slot.rid = r.rid
+            slot.pos = nv + len(r.prompt)     # next write position
+            slot.remaining = r.max_new_tokens - 1
+            slot.generated = [int(first[j])]
+            slot.started = now
             if slot.remaining <= 0:
                 self._finish(i)
 
@@ -149,12 +235,18 @@ class ServingEngine:
         self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
-    def step(self) -> None:
-        """One engine iteration: admit new requests, one decode step."""
+    def step(self) -> bool:
+        """One engine iteration: admit new requests, one decode step.
+        Returns whether the engine still has work (so pools can drive many
+        engines round-robin without blocking on any one of them)."""
+        if not self.has_work:
+            return False
+        t0 = time.perf_counter()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
-            return
+            self.busy_s += time.perf_counter() - t0
+            return self.has_work
         tokens = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.slots):
@@ -172,9 +264,16 @@ class ServingEngine:
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 self._finish(i)
         self.steps += 1
+        self.busy_s += time.perf_counter() - t0
+        return self.has_work
 
     def run(self, max_steps: int = 10_000) -> list[Completion]:
-        while (self.queue or any(s.active for s in self.slots)) \
-                and self.steps < max_steps:
+        """Drive until idle (or ``max_steps`` decode steps *for this call*)
+        and drain the finished completions — engines are reused across
+        serves by the pool, so neither the step budget nor the done list
+        may accumulate across calls."""
+        start = self.steps
+        while self.has_work and self.steps - start < max_steps:
             self.step()
-        return self.done
+        out, self.done = self.done, []
+        return out

@@ -3,12 +3,43 @@ tests and benches must see the real single CPU device (the 512-placeholder
 override belongs to the dry-run only)."""
 from __future__ import annotations
 
+import importlib.util
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.models.model import Model
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _uses_hypothesis(path: pathlib.Path) -> bool:
+    try:
+        src = path.read_text(encoding="utf-8")
+    except OSError:
+        return False
+    return "import hypothesis" in src or "from hypothesis" in src
+
+
+def pytest_ignore_collect(collection_path, config):
+    """Offline degradation: property-based modules are skipped (not
+    collection errors) when ``hypothesis`` isn't installed — tier-1 must
+    run from a clean checkout with only runtime deps."""
+    p = pathlib.Path(str(collection_path))
+    if (not HAVE_HYPOTHESIS and p.suffix == ".py"
+            and p.name.startswith("test_") and _uses_hypothesis(p)):
+        return True
+    return None
+
+
+def pytest_report_header(config):
+    if not HAVE_HYPOTHESIS:
+        return ("hypothesis not installed — property-based test modules "
+                "are skipped (pip install -e '.[dev]' to enable them)")
+    return None
 
 
 @pytest.fixture(scope="session")

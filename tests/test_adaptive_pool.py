@@ -1,0 +1,111 @@
+"""Adaptive serving pool: the online scheduler loop closed over the
+container pool (paper's concluding proposal, end-to-end)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.containers import feasible_counts
+from repro.models.model import Model
+from repro.serving import (AdaptiveServingPool, Request,
+                           SyntheticContainerPool, synthetic_pool_factory)
+
+
+def _convex_time(n):
+    return 1.0 / n + 0.02 * n * n          # argmin over {1,2,4,8} at n=4
+
+
+def _energy(n):
+    return _convex_time(n) * (40.0 + 7.0 * n)   # argmin at n=2
+
+
+def test_adaptive_converges_to_time_argmin_within_8_waves():
+    apool = AdaptiveServingPool(
+        None, None, [1, 2, 4, 8], objective="time",
+        pool_factory=synthetic_pool_factory(_convex_time, _energy))
+    for _ in range(8):
+        apool.serve_wave([])
+    assert apool.choice == 4
+    assert apool.scheduler.n_observations == 8
+    assert all(w.n_containers in (1, 2, 4, 8) for w in apool.history)
+
+
+def test_adaptive_converges_to_energy_argmin():
+    apool = AdaptiveServingPool(
+        None, None, [1, 2, 4, 8], objective="energy",
+        pool_factory=synthetic_pool_factory(_convex_time, _energy))
+    for _ in range(8):
+        apool.serve_wave([])
+    assert apool.choice == min((1, 2, 4, 8), key=_energy) == 2
+
+
+def test_adaptive_reuses_pools_per_count():
+    built = []
+
+    def factory(n):
+        built.append(n)
+        return SyntheticContainerPool(n, _convex_time, _energy)
+
+    apool = AdaptiveServingPool(None, None, [1, 2, 4],
+                                objective="time", pool_factory=factory)
+    for _ in range(6):
+        apool.serve_wave([])
+    # once converged, waves reuse the cached pool: one build per count seen
+    assert len(built) == len(set(built))
+
+
+def test_adaptive_wave_history_and_completions():
+    apool = AdaptiveServingPool(
+        None, None, [1, 2], objective="time",
+        pool_factory=synthetic_pool_factory(_convex_time))
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2) for i in range(5)]
+    out = apool.serve_wave(list(reqs))
+    assert [c.rid for c in out] == [0, 1, 2, 3, 4]
+    w = apool.history[0]
+    assert w.wave == 0 and w.n_requests == 5
+    assert w.wall_s > 0 and w.energy_j > 0
+
+
+def test_requires_model_or_factory():
+    with pytest.raises(ValueError):
+        AdaptiveServingPool(None, None, [1, 2])
+
+
+def test_feasible_counts_memory_bounded():
+    """Big model on a 256-chip pod: low counts (weights sharded over many
+    chips per container) fit; high counts (1 chip per container holding
+    the full replica) do not — the paper's TX2 memory cap, pod-sized."""
+    cfg = get_config("qwen3-8b")
+    counts = feasible_counts(cfg, 256, hbm_bytes=16e9)
+    assert counts, "some factorisation must fit"
+    assert counts == sorted(counts)
+    assert 1 in counts
+    assert 256 not in counts               # 16 GB of weights on one chip
+    # reduced config fits everywhere
+    small = get_config("qwen3-0.6b-reduced")
+    assert feasible_counts(small, 8) == [1, 2, 4, 8]
+
+
+@pytest.mark.slow
+def test_adaptive_real_model_smoke():
+    """Three real waves over the reduced model: every wave returns all its
+    requests in order and feeds the scheduler."""
+    cfg = get_config("qwen3-0.6b-reduced")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    apool = AdaptiveServingPool(model, params, [1, 2],
+                                objective="energy",
+                                n_slots_per_container=2, max_len=64)
+    for wave in range(3):
+        reqs = [Request(rid=wave * 4 + i,
+                        prompt=rng.integers(0, cfg.vocab_size, (6,),
+                                            dtype=np.int32),
+                        max_new_tokens=3) for i in range(4)]
+        out = apool.serve_wave(reqs)
+        assert [c.rid for c in out] == [r.rid for r in reqs]
+    assert apool.scheduler.n_observations == 3
+    assert apool.choice in (1, 2)

@@ -4,6 +4,8 @@ process)."""
 from __future__ import annotations
 
 import json
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -22,8 +24,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.model import Model
     from repro.train.loop import TrainConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("qwen3-0.6b-reduced")
     model = Model(cfg)
     results = {}
@@ -41,7 +43,7 @@ SCRIPT = textwrap.dedent("""
         else:
             insh = (rules.params(args[0]), rules.cache(args[1], 8),
                     rules.batch(args[2]))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(step, in_shardings=insh).lower(*args).compile()
             txt = compiled.as_text()
         cost = analyze_hlo(txt)
@@ -57,7 +59,11 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_lower_compile_roofline_on_fake_mesh():
-    r = subprocess.run([sys.executable, "-c", SCRIPT],
+    # the subprocess doesn't see pytest's pythonpath ini — pass src along
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                        capture_output=True, text=True, timeout=480)
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])

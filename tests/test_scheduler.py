@@ -71,6 +71,18 @@ def test_summary_contains_fitted_models():
     assert s["choice"] in range(1, 13)
 
 
+def test_best_is_exploitation_only():
+    """best() matches the fitted argmin once models exist, and falls back
+    to the best observed mean (never exploration) before that."""
+    dev = tx2_model()
+    sched = DivideAndSaveScheduler(list(range(1, 7)), objective="energy",
+                                   epsilon=0.5, seed=1)
+    _drive(sched, dev, [2, 5])             # too few counts to fit
+    assert sched.best() == min((2, 5), key=dev.energy)
+    _drive(sched, dev, [1, 3, 4, 6])
+    assert sched.best() == sched._argmin()
+
+
 def test_rejects_empty_feasible_set():
     with pytest.raises(ValueError):
         DivideAndSaveScheduler([])

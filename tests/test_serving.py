@@ -169,6 +169,123 @@ def test_engine_interleaved_submission(small_lm):
     assert got == want
 
 
+def test_step_reports_work_remaining(small_lm):
+    """Non-blocking contract: step() is a no-op returning False when idle,
+    True while work remains — what lets a pool drive engines round-robin."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    assert not eng.has_work
+    assert eng.step() is False
+    eng.submit_many(_requests(model.cfg, 2, max_new=3))
+    assert eng.has_work
+    assert eng.step() is True          # prefill + first decode, more left
+    while eng.step():
+        pass
+    assert not eng.has_work
+    assert len(eng.done) == 2
+    assert eng.busy_s > 0.0
+
+
+def test_batched_admission_matches_one_at_a_time(small_lm):
+    """Same-bucket ragged prompts admitted as one prefill batch must
+    produce exactly the tokens of per-request admission (per-row logits_at
+    makes the padded bucket exact)."""
+    model, params = small_lm
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, model.cfg.vocab_size,
+                                        (plen,), dtype=np.int32),
+                    max_new_tokens=4)
+            for i, plen in enumerate((4, 7, 11, 16, 5))]  # all bucket 16
+
+    batched = ServingEngine(model, params, n_slots=4, max_len=64,
+                            batch_admit=True)
+    batched.submit_many(reqs)
+    got = {c.rid: c.tokens for c in batched.run()}
+
+    single = ServingEngine(model, params, n_slots=4, max_len=64,
+                           batch_admit=False)
+    single.submit_many(reqs)
+    want = {c.rid: c.tokens for c in single.run()}
+    assert got == want
+
+
+def test_concurrent_pool_order_and_disjoint_rids(small_lm):
+    """The concurrent pool preserves request order in the combined output
+    and assigns each rid to exactly one container."""
+    model, params = small_lm
+    reqs = _requests(model.cfg, 9, max_new=3, seed=7)
+    pool = ContainerServingPool(model, params, n_containers=3,
+                                n_slots_per_container=2, max_len=64)
+    ordered, per, wall, energy = pool.serve_timed(list(reqs),
+                                                  concurrent=True)
+    assert [c.rid for c in ordered] == [r.rid for r in reqs]
+    rid_sets = [set(c.rid for c in r.completions) for r in per]
+    for i, a in enumerate(rid_sets):
+        for b in rid_sets[i + 1:]:
+            assert not (a & b), "containers served overlapping rids"
+    assert set().union(*rid_sets) == {r.rid for r in reqs}
+    assert wall > 0 and energy > 0
+    for r in per:
+        assert 0 < r.busy_s and r.energy_j > 0
+
+
+def test_concurrent_matches_sequential_outputs(small_lm):
+    """Threaded execution is semantically invisible: identical completions
+    to the sequential baseline (greedy decode, independent engines)."""
+    model, params = small_lm
+    reqs = _requests(model.cfg, 8, max_new=3, seed=9)
+    pool = ContainerServingPool(model, params, n_containers=4,
+                                n_slots_per_container=2, max_len=64)
+    seq, _ = pool.serve(list(reqs), concurrent=False)
+    conc, _ = pool.serve(list(reqs), concurrent=True)
+    assert [(c.rid, tuple(c.tokens)) for c in conc] == \
+           [(c.rid, tuple(c.tokens)) for c in seq]
+
+
+def test_engine_run_drains_completions(small_lm):
+    """Engines are reused across serves: run() must return only this
+    call's completions and reset its step budget per call."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng.submit_many(_requests(model.cfg, 3, max_new=2))
+    first = eng.run()
+    assert sorted(c.rid for c in first) == [0, 1, 2]
+    assert eng.run() == []                 # drained, idle
+    eng.submit_many(_requests(model.cfg, 2, max_new=2, seed=2))
+    second = eng.run()
+    assert len(second) == 2                # no stale completions
+
+
+def test_pool_reuse_returns_only_current_wave(small_lm):
+    """A cached pool serving repeated waves (the adaptive loop) must not
+    leak completions from earlier waves into later results."""
+    model, params = small_lm
+    pool = ContainerServingPool(model, params, n_containers=2,
+                                n_slots_per_container=2, max_len=64)
+    reqs = _requests(model.cfg, 4, max_new=2)
+    pool.serve(list(reqs))
+    ordered, per = pool.serve(list(reqs))  # same rids, reused engines
+    assert [c.rid for c in ordered] == [r.rid for r in reqs]
+    assert sum(len(r.completions) for r in per) == len(reqs)
+
+
+def test_concurrent_worker_error_propagates(small_lm):
+    """An engine failure inside a worker thread must surface as the
+    original exception, not a later unpack error."""
+    model, params = small_lm
+
+    class Boom(ServingEngine):
+        def run(self, max_steps=10_000):
+            raise RuntimeError("boom")
+
+    pool = ContainerServingPool(model, params, n_containers=2,
+                                n_slots_per_container=2, max_len=64,
+                                engine_factory=Boom)
+    with pytest.raises(RuntimeError, match="boom"):
+        pool.serve(_requests(model.cfg, 2, max_new=2))
+
+
 def test_video_stream_requests_deterministic():
     s1 = VideoRequestStream(n_frames=10, seed=42)
     s2 = VideoRequestStream(n_frames=10, seed=42)
