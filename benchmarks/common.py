@@ -17,6 +17,35 @@ def save(name: str, payload: dict, lines: list[str]) -> str:
     return md
 
 
+def make_requests(cfg, n_requests: int, max_new: int,
+                  plen_range: tuple[int, int] = (8, 24), seed: int = 0):
+    """Synthetic serving wave: random prompts with ragged lengths."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    lo, hi = plen_range
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(lo, hi)),),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
+def save_bench(name: str, metrics: dict) -> str:
+    """Machine-readable perf-trajectory point: ``BENCH_<name>.json`` holds
+    a flat dict of headline numbers (tokens/s, wall, energy proxy, …) so
+    CI can archive one comparable artifact per benchmark across PRs —
+    distinct from the human-oriented ``<name>.json``/``.md`` pair."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True, default=float)
+    return path
+
+
 def table(headers: list[str], rows: list[list]) -> list[str]:
     out = ["| " + " | ".join(headers) + " |",
            "|" + "---|" * len(headers)]

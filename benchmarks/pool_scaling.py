@@ -15,14 +15,13 @@ dominates Python dispatch, which is what lets threads overlap on CPU.
 """
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import save, table
+from benchmarks.common import make_requests, save, save_bench, table
 from repro.configs.base import reduce_config
 from repro.configs.registry import get_config
 from repro.models.model import Model
 from repro.serving import (AdaptiveServingPool, ContainerServingPool,
-                           Request, synthetic_pool_factory)
+                           synthetic_pool_factory)
 
 
 def bench_config():
@@ -30,16 +29,6 @@ def bench_config():
     return reduce_config(get_config("qwen3-0.6b"), n_layers=4, d_model=512,
                          n_heads=8, n_kv_heads=4, d_ff=2048,
                          vocab_size=8192)
-
-
-def make_requests(cfg, n_requests: int, max_new: int, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        (int(rng.integers(20, 60)),),
-                                        dtype=np.int32),
-                    max_new_tokens=max_new)
-            for i in range(n_requests)]
 
 
 def measure_pool(model, params, requests, ns=(1, 2, 4), n_slots=2,
@@ -95,7 +84,7 @@ def run(quick: bool = False) -> str:
     cfg = bench_config()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    requests = make_requests(cfg, n_requests, max_new)
+    requests = make_requests(cfg, n_requests, max_new, plen_range=(20, 60))
 
     rows = measure_pool(model, params, requests, reps=reps)
     payload: dict = {"measured": rows}
@@ -120,6 +109,16 @@ def run(quick: bool = False) -> str:
               f"per-wave picks:   {picks}",
               f"per-wave choices: {choices}",
               f"converged at wave: {converged_at}"]
+    best = max(rows, key=lambda r: r["speedup"])
+    save_bench("pool_scaling", {
+        "config": cfg.name,
+        "best_speedup": best["speedup"], "best_speedup_n": best["n"],
+        "adaptive_converged_at_wave": converged_at,
+        "per_n": {str(r["n"]): {"wall_seq_s": r["wall_seq_s"],
+                                "wall_conc_s": r["wall_conc_s"],
+                                "energy_seq_j": r["energy_seq_j"],
+                                "energy_conc_j": r["energy_conc_j"]}
+                  for r in rows}})
     return save("pool_scaling", payload, lines)
 
 

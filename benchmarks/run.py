@@ -18,7 +18,8 @@ def main() -> int:
                     help="skip the (slower) pod-factorisation sweep")
     args = ap.parse_args()
 
-    from benchmarks import fig1_cores, fig3_split, pool_scaling, table2_fit
+    from benchmarks import (decode_throughput, fig1_cores, fig3_split,
+                            pool_scaling, table2_fit)
 
     t0 = time.time()
     print("=" * 72)
@@ -40,6 +41,11 @@ def main() -> int:
     print("pool_scaling — concurrent container pool + adaptive scheduler")
     print("=" * 72)
     print(pool_scaling.run(quick=args.quick))
+
+    print("=" * 72)
+    print("decode_throughput — fused chunked decode vs per-token")
+    print("=" * 72)
+    print(decode_throughput.run(quick=args.quick))
 
     if not args.skip_tpu:
         sweeps = [("qwen3-8b", "decode_32k")]

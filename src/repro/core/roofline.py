@@ -16,6 +16,7 @@ Hardware model (TPU v5e-class, per assignment):
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.hlo_analysis import HloCost
@@ -27,6 +28,11 @@ ICI_BW = 50e9              # bytes/s / link (one effective link per phase)
 # energy model constants (per chip, activity-based; cf. DESIGN.md §2)
 P_IDLE_W = 80.0
 P_PEAK_W = 350.0
+
+# host-side cost of one decode dispatch (executable launch + sync +
+# scheduler bookkeeping) — the per-token overhead the fused chunk decode
+# amortises; edge-class hosts sit around 10⁻⁴ s
+DISPATCH_OVERHEAD_S = 1e-4
 
 
 @dataclasses.dataclass
@@ -80,6 +86,29 @@ def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
     d_dec = shape.global_batch * shape.seq_len
     d_enc = shape.global_batch * cfg.encoder_seq
     return factor * (n * d_dec + n_enc * d_enc)
+
+
+def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
+                        overhead_s: float = DISPATCH_OVERHEAD_S,
+                        overhead_frac: float = 0.1,
+                        max_chunk: int = 32) -> int:
+    """Decode chunk length from arithmetic intensity: the cost-model hook
+    the serving engine (and the adaptive scheduler's wave sizing) use.
+
+    A batch-``batch`` decode step streams the weights once and computes
+    ``2·N_active·B`` FLOPs, so its device time is the roofline max of the
+    compute and memory terms; decode sits far below the machine balance
+    point, so per-step *dispatch* overhead, not the device, dominates
+    small models. Pick the smallest chunk that keeps the per-chunk
+    dispatch overhead under ``overhead_frac`` of fused device time,
+    clamped to ``[1, max_chunk]`` (compile cost and admission latency
+    bound the top).
+    """
+    flops = 2.0 * cfg.active_param_count() * batch
+    bytes_ = 2.0 * cfg.param_count()          # bf16 weight stream per step
+    t_tok = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    amortised = overhead_s * (1.0 - overhead_frac) / overhead_frac
+    return max(1, min(max_chunk, math.ceil(amortised / max(t_tok, 1e-12))))
 
 
 def build_report(arch: str, shape: InputShape, cfg: ArchConfig,

@@ -11,6 +11,7 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_ref, ref
 from repro.kernels import flash_attention as _fa
@@ -56,6 +57,16 @@ def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
                                          interpret=(mode == "interpret"))
     return _da.decode_attention(q, k, v, valid, softcap=softcap,
                                 interpret=(mode == "interpret"))
+
+
+def decode_cross_attention(q, k, v, *, softcap: float = 0.0):
+    """Single-token cross-attention against a fixed (fully valid) memory,
+    routed through the flash-*decode* kernel path: during chunked decode
+    the query is one token, so the prefill flash kernel's S×S tiling is
+    the wrong shape — the decode kernel streams the memory K/V once per
+    query instead. q: (B, H, hd); k/v: (B, S_mem, Hkv, hd)."""
+    valid = jnp.ones(k.shape[:2], bool)
+    return decode_attention(q, k, v, valid, softcap=softcap)
 
 
 def ssd_scan(x, dt, A, B_, C_, D, *, chunk: int = 64):

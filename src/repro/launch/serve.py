@@ -67,7 +67,7 @@ def main() -> None:
         for r in per:
             print(f"  container {r.container_id}: {r.n_requests} reqs "
                   f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
-                  f"~{r.energy_j:.1f}J")
+                  f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J")
         return
 
     # online mode: the scheduler probes container counts across waves,
@@ -81,7 +81,7 @@ def main() -> None:
         apool.serve_wave(batch_of_requests(wave * args.requests))
         w = apool.history[-1]
         print(f"wave {w.wave}: n={w.n_containers} wall {w.wall_s:.2f}s "
-              f"energy {w.energy_j:.1f}J")
+              f"{w.tokens_per_s:.1f} tok/s energy {w.energy_j:.1f}J")
     print(f"feasible counts: {feasible}")
     print(f"converged choice: n={apool.choice}")
     print("scheduler summary:", apool.scheduler.summary())

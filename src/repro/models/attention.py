@@ -93,11 +93,26 @@ def attn_prefill(p: dict, cfg: ArchConfig, x: jax.Array, *,
 
 def cross_attn_prefill(p: dict, cfg: ArchConfig, x: jax.Array,
                        memory_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
-    """Decoder cross-attention; memory k/v precomputed from encoder output."""
+    """Decoder cross-attention; memory k/v precomputed from encoder output.
+    Softcap is applied here AND in cross_attn_decode — the two paths must
+    stay numerically symmetric (decode == teacher-forced forward)."""
     k, v = memory_kv
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    out = kops.flash_attention(q, k, v, causal=False, window=0)
+    out = kops.flash_attention(q, k, v, causal=False, window=0,
+                               softcap=cfg.attn_logit_softcap)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attn_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                      memory_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decode-time cross-attention: x is (B, 1, d) — one query token — so
+    dispatch to the flash-decode kernel (memory streamed once) instead of
+    the prefill kernel's square tiling."""
+    k, v = memory_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0]
+    out = kops.decode_cross_attention(q, k, v,
+                                      softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
 
 
 def cross_attn_memory(p: dict, cfg: ArchConfig, memory: jax.Array):

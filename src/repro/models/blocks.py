@@ -230,8 +230,8 @@ def cross_decode(p, cfg: ArchConfig, x, cache, pos):
                                      cache["self"], pos)
     x = x + h
     mem_kv = (cache["mem_k"], cache["mem_v"])
-    x = x + attn.cross_attn_prefill(p["cross_attn"], cfg,
-                                    norm_fwd(cfg, p["ln2"], x), mem_kv)
+    x = x + attn.cross_attn_decode(p["cross_attn"], cfg,
+                                   norm_fwd(cfg, p["ln2"], x), mem_kv)
     x = x + mlp_fwd(p["mlp"], norm_fwd(cfg, p["ln3"], x), cfg.act)
     return constrain_batch(x), {"self": self_cache, "mem_k": cache["mem_k"],
                                 "mem_v": cache["mem_v"]}

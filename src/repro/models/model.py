@@ -541,3 +541,59 @@ class Model:
         else:
             raise ValueError(fam)
         return self._head(params, x[:, -1]), new_cache
+
+    # ------------------------------------------------------------------
+    # fused multi-token decode
+    # ------------------------------------------------------------------
+    def decode_chunk(self, params: Params, cache: Cache, state: dict,
+                     n_tokens: int, *, max_len: int,
+                     greedy: bool = True) -> tuple[jax.Array, jax.Array,
+                                                   dict, Cache]:
+        """Fused decode of ``n_tokens`` steps: one ``lax.scan`` over the
+        per-token ``decode_step`` body with sampling (argmax or
+        PRNG-carried categorical), per-slot bookkeeping and stop
+        conditions all inside the graph — one XLA dispatch and one host
+        transfer per *chunk* instead of per token.
+
+        ``state`` carries the per-slot decode state:
+          tokens    (B,) int32  last sampled token per slot
+          pos       (B,) int32  next cache write position per slot
+          remaining (B,) int32  tokens still to emit per slot
+          active    (B,) bool   slot is mid-generation
+          key       PRNG key    sampling state (advanced when not greedy)
+
+        A slot emits one token per step while active; it deactivates
+        in-graph once ``remaining`` hits 0 or ``pos`` reaches
+        ``max_len - 1`` (mid-chunk finishes), after which its state is
+        frozen and further steps write only ignorable garbage into its
+        (about-to-be-re-prefilled) cache row — the same contract the
+        per-token engine path has for idle slots.
+
+        Returns ``(tokens (B, n_tokens), emitted (B,), new_state,
+        new_cache)``; per slot, only the first ``emitted`` tokens of its
+        row are real. Jit this with ``donate_argnums`` on ``cache`` so
+        the scan updates the KV rings in place (copy-free decode).
+        """
+        def step(carry, _):
+            cache, tok, pos, rem, act, key = carry
+            logits, cache = self.decode_step(params, tok[:, None], cache,
+                                             pos)
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
+            nxt = jnp.where(act, nxt, tok)
+            pos = jnp.where(act, pos + 1, pos)
+            rem = jnp.where(act, rem - 1, rem)
+            nact = act & (rem > 0) & (pos < max_len - 1)
+            return (cache, nxt, pos, rem, nact, key), (nxt, act)
+
+        carry = (cache, state["tokens"], state["pos"], state["remaining"],
+                 state["active"], state["key"])
+        (cache, tok, pos, rem, act, key), (toks, emits) = jax.lax.scan(
+            step, carry, None, length=n_tokens)
+        new_state = {"tokens": tok, "pos": pos, "remaining": rem,
+                     "active": act, "key": key}
+        return (jnp.swapaxes(toks, 0, 1),
+                jnp.sum(emits.astype(jnp.int32), axis=0), new_state, cache)

@@ -37,6 +37,8 @@ class WaveResult:
     wall_s: float
     energy_j: float
     n_requests: int
+    n_tokens: int = 0             # tokens emitted across the wave
+    tokens_per_s: float = 0.0     # wave decode throughput
 
 
 class AdaptiveServingPool:
@@ -76,8 +78,10 @@ class AdaptiveServingPool:
         n = self.scheduler.pick()
         ordered, _, wall, energy = self._pool(n).serve_timed(requests)
         self.scheduler.observe(n, wall, energy)
+        n_tokens = sum(len(c.tokens) for c in ordered)
         self.history.append(WaveResult(len(self.history), n, wall, energy,
-                                       len(requests)))
+                                       len(requests), n_tokens,
+                                       n_tokens / wall if wall > 0 else 0.0))
         return ordered
 
     def serve(self, waves) -> list[list[Completion]]:

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with fused multi-token decode.
 
 Slot-based: the engine owns a KV cache with ``n_slots`` sequences. Queued
 requests are admitted with **batched bucket admission**: all waiting
@@ -9,13 +9,30 @@ slots decode in lockstep HLO with per-slot positions (the cache/ring masks
 make ragged depths correct — see models/attention.py). Finished slots are
 refilled from the queue mid-decode: continuous batching.
 
+Decode runs in **macro-steps**: each ``step()`` admits, then runs one
+fused chunk of up to ``chunk_tokens`` decode iterations entirely on
+device (``Model.decode_chunk`` — a ``lax.scan`` with sampling and stop
+conditions in-graph), paying one XLA dispatch and one host transfer per
+chunk instead of per token. The chunk jit **donates the KV cache** (as
+does the admission row-scatter), so decode never copies the cache —
+after a step the previous cache buffers are invalid, which is why the
+engine always replaces ``self.cache`` with the returned tree. Chunk
+length defaults to the roofline cost model
+(``core/roofline.decode_chunk_tokens``) and is clamped each step by the
+shortest ``remaining`` among active slots (and their ``max_len``
+headroom) so no decode iteration is wasted on a finished slot.
+``chunked=False`` keeps the one-dispatch-per-token path as a measurable
+baseline (see benchmarks/decode_throughput.py).
+
 The engine is step-driven and non-blocking at the scheduling level:
-``step()`` performs at most one admission round plus one decode step and
+``step()`` performs at most one admission round plus one decode chunk and
 returns whether work remains, so a pool can interleave many engines (one
 per container) from worker threads — jax releases the GIL during device
 dispatch, which is what makes the concurrent container pool in
 serving/pool.py actually overlap. ``busy_s`` accumulates the wall time the
-engine spent inside ``step()`` and feeds the pool's energy proxy.
+engine spent inside ``step()`` and feeds the pool's energy proxy;
+``tokens_generated`` counts emitted tokens at the same per-chunk
+granularity, so pools can surface per-container tokens/s.
 
 Engines sharing one ``Model`` share jitted prefill/decode executables
 (module-level cache) so an n-container pool compiles each shape once, not
@@ -37,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.roofline import decode_chunk_tokens
 from repro.models.model import Model
 
 
@@ -70,7 +88,7 @@ class _Slot:
     pos: int = 0                  # next position to write
     remaining: int = 0
     generated: list = dataclasses.field(default_factory=list)
-    started: float = 0.0
+    started: float = 0.0          # perf_counter stamp (monotonic)
 
 
 # jitted executables shared by every engine built on the same Model —
@@ -90,7 +108,8 @@ class ServingEngine:
     def __init__(self, model: Model, params: Any, n_slots: int = 4,
                  max_len: int = 512, dtype=jnp.float32,
                  greedy: bool = True, seed: int = 0,
-                 batch_admit: bool = True):
+                 batch_admit: bool = True, chunked: bool = True,
+                 chunk_tokens: int | None = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -101,6 +120,9 @@ class ServingEngine:
         self.done: list[Completion] = []
         self.greedy = greedy
         self.batch_admit = batch_admit
+        self.chunked = chunked
+        self.chunk_tokens = (chunk_tokens if chunk_tokens is not None
+                             else decode_chunk_tokens(model.cfg, n_slots))
         self._key = jax.random.PRNGKey(seed)
         self._jits = _shared_jits(model)
         if "decode" not in self._jits:
@@ -116,8 +138,10 @@ class ServingEngine:
             lambda a, b: next((i for i, (x, y) in
                                enumerate(zip(a.shape, b.shape)) if x != y),
                               None), one, two)
-        self.steps = 0
-        self.busy_s = 0.0         # wall time spent inside step()
+        self.steps = 0                # step() calls that found work
+        self.chunks = 0               # fused decode chunks dispatched
+        self.tokens_generated = 0     # tokens emitted (prefill + decode)
+        self.busy_s = 0.0             # wall time spent inside step()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -149,19 +173,38 @@ class ServingEngine:
             self._jits[key] = jax.jit(fn)
         return self._jits[key]
 
+    def _chunk_fn(self, n_tokens: int):
+        """Fused decode executable for a chunk of ``n_tokens`` steps; the
+        engine cache is donated (arg 1), so the KV rings update in place."""
+        key = ("chunk", n_tokens, self.max_len, self.greedy)
+        if key not in self._jits:
+            m, ml, greedy = self.model, self.max_len, self.greedy
+
+            def fn(params, cache, state):
+                return m.decode_chunk(params, cache, state, n_tokens,
+                                      max_len=ml, greedy=greedy)
+            self._jits[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._jits[key]
+
     def _insert_rows(self, src_cache: Any, slot_ids: list[int]) -> None:
         """Scatter prefill cache rows into their slots (any slot set, any
-        batch size — including a full batch of n_slots rows)."""
-        idx = jnp.asarray(slot_ids)
+        batch size — including a full batch of n_slots rows). The engine
+        cache is donated into the jitted scatter, so admission updates the
+        cache in place too."""
+        if "insert" not in self._jits:
+            axes = self._batch_axes
 
-        def ins(e, s, ax):
-            if ax is None:
-                return e
-            em = jnp.moveaxis(e, ax, 0)
-            sm = jnp.moveaxis(s.astype(e.dtype), ax, 0)
-            return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
-        self.cache = jax.tree.map(ins, self.cache, src_cache,
-                                  self._batch_axes)
+            def ins_fn(cache, src, idx):
+                def ins(e, s, ax):
+                    if ax is None:
+                        return e
+                    em = jnp.moveaxis(e, ax, 0)
+                    sm = jnp.moveaxis(s.astype(e.dtype), ax, 0)
+                    return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
+                return jax.tree.map(ins, cache, src, axes)
+            self._jits["insert"] = jax.jit(ins_fn, donate_argnums=(0,))
+        self.cache = self._jits["insert"](self.cache, src_cache,
+                                          jnp.asarray(slot_ids))
 
     # ------------------------------------------------------------------
     def _admit_key(self, req: Request):
@@ -210,7 +253,7 @@ class ServingEngine:
             self.params, batch, jnp.asarray(logits_idx))
         self._insert_rows(src_cache, slot_ids)
         first = self._pick(logits)
-        now = time.time()
+        now = time.perf_counter()
         for j, (i, r) in enumerate(zip(slot_ids, reqs)):
             slot = self.slots[i]
             slot.active = True
@@ -219,6 +262,7 @@ class ServingEngine:
             slot.remaining = r.max_new_tokens - 1
             slot.generated = [int(first[j])]
             slot.started = now
+            self.tokens_generated += 1
             if slot.remaining <= 0:
                 self._finish(i)
 
@@ -231,28 +275,60 @@ class ServingEngine:
     def _finish(self, i: int) -> None:
         s = self.slots[i]
         self.done.append(Completion(s.rid, s.generated, s.pos,
-                                    time.time() - s.started))
+                                    time.perf_counter() - s.started))
         self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """One engine iteration: admit new requests, one decode step.
-        Returns whether the engine still has work (so pools can drive many
-        engines round-robin without blocking on any one of them)."""
-        if not self.has_work:
-            return False
-        t0 = time.perf_counter()
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.active]
-        if not active:
-            self.busy_s += time.perf_counter() - t0
-            return self.has_work
+    def _decode_chunk(self, active: list[int]) -> None:
+        """One fused macro-step: decode up to ``chunk_tokens`` tokens for
+        every active slot in a single dispatch, then materialise the token
+        block with a single host transfer."""
+        exact = max(1, min(
+            self.chunk_tokens,
+            min(self.slots[i].remaining for i in active),
+            min(self.max_len - 1 - self.slots[i].pos for i in active)))
+        # round down to a power of two: still never a scan iteration past
+        # the shortest remaining budget, but the shared jit cache compiles
+        # at most log2(max_chunk) scan lengths instead of one per distinct
+        # clamp value (ragged budgets would otherwise trigger a compile
+        # spike mid-serving on each new length)
+        n_tokens = 1 << (exact.bit_length() - 1)
+        tok = np.zeros((self.n_slots,), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        rem = np.zeros((self.n_slots,), np.int32)
+        act = np.zeros((self.n_slots,), bool)
+        for i in active:
+            s = self.slots[i]
+            tok[i], pos[i], rem[i], act[i] = (s.generated[-1], s.pos,
+                                              s.remaining, True)
+        state = {"tokens": jnp.asarray(tok), "pos": jnp.asarray(pos),
+                 "remaining": jnp.asarray(rem), "active": jnp.asarray(act),
+                 "key": self._key}
+        block, emitted, state, self.cache = self._chunk_fn(n_tokens)(
+            self.params, self.cache, state)
+        self._key = state["key"]
+        block, emitted = jax.device_get((block, emitted))
+        for i in active:
+            s = self.slots[i]
+            c = int(emitted[i])
+            s.generated.extend(block[i, :c].tolist())
+            s.pos += c
+            s.remaining -= c
+            self.tokens_generated += c
+            if s.remaining <= 0 or s.pos >= self.max_len - 1:
+                self._finish(i)
+        self.chunks += 1
+
+    def _decode_token(self, active: list[int]) -> None:
+        """Per-token baseline path: one dispatch + one host sync per
+        generated token, undonated cache (full copy per step) — kept so
+        the fused path's win stays measurable (benchmarks)."""
         tokens = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
-        for i, s in enumerate(self.slots):
-            if s.active:
-                tokens[i, 0] = s.generated[-1]
-                pos[i] = s.pos
+        for i in active:
+            s = self.slots[i]
+            tokens[i, 0] = s.generated[-1]
+            pos[i] = s.pos
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos))
         nxt = self._pick(logits)
@@ -261,17 +337,37 @@ class ServingEngine:
             s.generated.append(int(nxt[i]))
             s.pos += 1
             s.remaining -= 1
+            self.tokens_generated += 1
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 self._finish(i)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine macro-iteration: admit new requests, then one decode
+        chunk (or one decode step in per-token mode). Returns whether the
+        engine still has work (so pools can drive many engines round-robin
+        without blocking on any one of them). Every call that found work —
+        including admit-only ones — counts against ``run``'s budget."""
+        if not self.has_work:
+            return False
         self.steps += 1
+        t0 = time.perf_counter()
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if active:
+            if self.chunked:
+                self._decode_chunk(active)
+            else:
+                self._decode_token(active)
         self.busy_s += time.perf_counter() - t0
         return self.has_work
 
     def run(self, max_steps: int = 10_000) -> list[Completion]:
-        """Drive until idle (or ``max_steps`` decode steps *for this call*)
-        and drain the finished completions — engines are reused across
-        serves by the pool, so neither the step budget nor the done list
-        may accumulate across calls."""
+        """Drive until idle (or ``max_steps`` ``step()`` calls *for this
+        call* — every call counts, so admit-only iterations cannot spin
+        past the budget) and drain the finished completions — engines are
+        reused across serves by the pool, so neither the step budget nor
+        the done list may accumulate across calls."""
         start = self.steps
         while self.has_work and self.steps - start < max_steps:
             self.step()

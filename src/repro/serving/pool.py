@@ -11,8 +11,10 @@ testbed in examples/serve_video_detection.py pins real disjoint core sets
 instead.
 
 Per-container accounting: each ContainerResult carries the container's wall
-time, its busy time (wall the engine spent inside ``step()``), and an
-energy estimate from ``EnergyProxy`` — the paper's fixed+dynamic power
+time, its busy time (wall the engine spent inside ``step()``), its emitted
+token count and tokens/s (per-chunk granularity — the engine counts tokens
+as each fused decode chunk lands), and an energy estimate from
+``EnergyProxy`` — the paper's fixed+dynamic power
 decomposition (a baseline draw shared by the containers plus an activity
 draw proportional to busy time). The proxy is what the online scheduler
 optimises on hosts with no power sensor; the calibrated device simulators
@@ -53,6 +55,8 @@ class ContainerResult:
     n_requests: int
     busy_s: float = 0.0
     energy_j: float = 0.0
+    n_tokens: int = 0             # tokens emitted by this container
+    tokens_per_s: float = 0.0     # n_tokens / wall_s (decode throughput)
 
 
 class ContainerServingPool:
@@ -76,11 +80,12 @@ class ContainerServingPool:
         try:
             engine = self.engines[cid]
             t0 = time.perf_counter()
-            busy0 = engine.busy_s
+            busy0, toks0 = engine.busy_s, engine.tokens_generated
             engine.submit_many(seg)
             comps = engine.run()
             out[cid] = (comps, time.perf_counter() - t0,
-                        engine.busy_s - busy0)
+                        engine.busy_s - busy0,
+                        engine.tokens_generated - toks0)
         except BaseException as e:      # propagate across the thread join
             out[cid] = e
 
@@ -112,12 +117,13 @@ class ContainerServingPool:
                 raise e
 
         results, energy = [], 0.0
-        for cid, ((comps, c_wall, c_busy), seg) in enumerate(
+        for cid, ((comps, c_wall, c_busy, c_toks), seg) in enumerate(
                 zip(out, segments)):
             e = self.energy.container_energy(wall, c_busy, self.n_containers)
             energy += e
-            results.append(ContainerResult(cid, comps, c_wall, len(seg),
-                                           c_busy, e))
+            results.append(ContainerResult(
+                cid, comps, c_wall, len(seg), c_busy, e, c_toks,
+                c_toks / c_wall if c_wall > 0 else 0.0))
         # request-order combination: within a segment order completions by
         # the segment's submission order, then splice segments back with the
         # splitter (split/combine round-trip == original order)

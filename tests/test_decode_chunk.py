@@ -1,0 +1,198 @@
+"""Fused multi-token decode: parity, in-graph stop conditions, donation.
+
+The chunked decode path (``Model.decode_chunk`` + the macro-step engine)
+must be semantically invisible: identical greedy token streams to the
+per-token path for every model family, correct mid-chunk finishes, and a
+KV cache that is donated (updated in place) rather than copied per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.roofline import decode_chunk_tokens
+from repro.serving.engine import Request, ServingEngine
+
+# one representative per model family (see models/model.py's family table)
+FAMILY_ARCHS = [
+    "qwen3-0.6b",        # dense
+    "gemma3-27b",        # gemma (local/global sliding-window pattern)
+    "mixtral-8x22b",     # moe (GQA)
+    "mamba2-2.7b",       # ssm
+    "zamba2-7b",         # zamba (ssm + shared attention)
+    "whisper-large-v3",  # whisper (encoder-decoder, cross-attention)
+]
+
+
+def _requests(cfg, plens_max_new, seed=0):
+    """Ragged prompts and ragged budgets; whisper/vlm extras attached."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (plen, max_new) in enumerate(plens_max_new):
+        extras = {}
+        if cfg.n_encoder_layers:
+            extras["audio_frames"] = 0.1 * rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.n_vision_tokens:
+            extras["vision_embeds"] = 0.1 * rng.standard_normal(
+                (cfg.n_vision_tokens, cfg.vision_embed_dim)).astype(
+                    np.float32)
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                       dtype=np.int32),
+            max_new_tokens=max_new, extras=extras))
+    return reqs
+
+
+def _serve(model, params, reqs, **kw):
+    eng = ServingEngine(model, params, n_slots=2, max_len=64, **kw)
+    eng.submit_many([Request(r.rid, r.prompt, r.max_new_tokens, r.extras)
+                     for r in reqs])
+    return {c.rid: c.tokens for c in eng.run()}, eng
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunked_matches_per_token_greedy(arch, reduced_models):
+    """Identical greedy streams, ragged prompt lengths AND ragged
+    ``remaining`` across slots (the chunk clamps to the shortest)."""
+    model, params = reduced_models[arch]
+    reqs = _requests(model.cfg, [(6, 5), (9, 3), (7, 6), (6, 4)])
+    want, _ = _serve(model, params, reqs, chunked=False)
+    got, eng = _serve(model, params, reqs, chunked=True, chunk_tokens=3)
+    assert got == want
+    assert eng.chunks > 0 and eng.chunks < sum(
+        m for _, m in [(6, 5), (9, 3), (7, 6), (6, 4)])
+
+
+def test_chunked_matches_per_token_sampling(reduced_models):
+    """The PRNG-carried in-graph categorical splits the key exactly like
+    the host-side per-token path, so even sampled streams are identical."""
+    model, params = reduced_models["qwen3-0.6b"]
+    reqs = _requests(model.cfg, [(6, 6), (8, 4), (7, 5)])
+    want, _ = _serve(model, params, reqs, chunked=False, greedy=False,
+                     seed=13)
+    got, _ = _serve(model, params, reqs, chunked=True, greedy=False,
+                    seed=13, chunk_tokens=4)
+    assert got == want
+
+
+def test_decode_chunk_midchunk_finish_matches_sequential(reduced_models):
+    """Direct ``decode_chunk`` call with a chunk longer than some slots'
+    ``remaining``: finished slots must stop emitting in-graph while the
+    others continue — emitted counts and token prefixes match a sequential
+    ``decode_step`` loop."""
+    model, params = reduced_models["qwen3-0.6b"]
+    cfg, ML = model.cfg, 64
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,), dtype=np.int32),
+               rng.integers(0, cfg.vocab_size, (5,), dtype=np.int32)]
+    batch = {"tokens": jnp.asarray(np.stack(prompts))}
+    cache = model.init_cache(2, ML)
+    logits, cache = model.prefill(params, batch, cache, logits_at=4)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    remaining = np.array([2, 5], np.int32)     # slot 0 finishes mid-chunk
+    T = 5
+    state = {"tokens": first, "pos": jnp.full((2,), 5, jnp.int32),
+             "remaining": jnp.asarray(remaining),
+             "active": jnp.ones((2,), bool),
+             "key": jax.random.PRNGKey(0)}
+    block, emitted, out, _ = model.decode_chunk(
+        params, jax.tree.map(jnp.copy, cache), state, T, max_len=ML)
+    assert emitted.tolist() == remaining.tolist()
+    assert out["active"].tolist() == [False, False]
+    assert out["pos"].tolist() == [7, 10]
+    assert out["remaining"].tolist() == [0, 0]
+
+    # sequential oracle: per-slot decode_step loops over the same cache
+    toks = [[int(first[i])] for i in range(2)]
+    seq_cache, pos = cache, np.array([5, 5], np.int32)
+    done = [False, False]
+    for _ in range(T):
+        cur = jnp.asarray([[toks[0][-1]], [toks[1][-1]]], jnp.int32)
+        lg, seq_cache = model.decode_step(params, cur, seq_cache,
+                                          jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(lg, -1))
+        for i in range(2):
+            if not done[i] and len(toks[i]) - 1 < remaining[i]:
+                toks[i].append(int(nxt[i]))
+                pos[i] += 1
+                done[i] = len(toks[i]) - 1 >= remaining[i]
+    block = np.asarray(block)
+    for i in range(2):
+        assert block[i, :int(emitted[i])].tolist() == toks[i][1:]
+
+
+def test_decode_chunk_jit_donates_cache(reduced_models):
+    """Acceptance: the chunk executable donates the cache — aliasing is
+    present in the lowered HLO and the input buffers are actually freed
+    after a call (no per-token/per-chunk full-cache copy)."""
+    model, params = reduced_models["qwen3-0.6b"]
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    fn = eng._chunk_fn(2)
+    state = {"tokens": jnp.zeros((2,), jnp.int32),
+             "pos": jnp.zeros((2,), jnp.int32),
+             "remaining": jnp.zeros((2,), jnp.int32),
+             "active": jnp.zeros((2,), bool),
+             "key": jax.random.PRNGKey(0)}
+    txt = fn.lower(params, eng.cache, state).as_text()
+    assert "tf.aliasing_output" in txt          # donation survived lowering
+    old = eng.cache
+    _, _, _, eng.cache = fn(params, eng.cache, state)
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(old))
+
+
+def test_admission_scatter_donates_cache(reduced_models):
+    """The prefill row-scatter donates the engine cache too: after an
+    admission the pre-admission cache buffers are gone, not copied."""
+    model, params = reduced_models["qwen3-0.6b"]
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    old = eng.cache
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(old))
+
+
+def test_chunk_clamped_by_remaining_and_headroom(reduced_models):
+    """No wasted decode iterations: the per-step chunk never exceeds the
+    shortest remaining budget or the cache headroom, and max_len
+    truncation still finishes slots correctly."""
+    model, params = reduced_models["qwen3-0.6b"]
+    eng = ServingEngine(model, params, n_slots=1, max_len=16,
+                        chunk_tokens=32)
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=100))
+    done = eng.run()
+    assert len(done) == 1
+    assert 0 < len(done[0].tokens) <= 16 - 8
+    # headroom 7 → power-of-two chunks 4, 2, 1 — bounded, no spin
+    assert 1 <= eng.chunks <= 3
+
+
+def test_chunk_lengths_bucketed_to_powers_of_two(reduced_models):
+    """Ragged budgets must not compile one scan executable per distinct
+    remaining-clamp value: the engine buckets chunk lengths to powers of
+    two, so the shared jit cache stays logarithmic in max_chunk."""
+    model, params = reduced_models["qwen3-0.6b"]
+    eng = ServingEngine(model, params, n_slots=2, max_len=64,
+                        chunk_tokens=8)
+    reqs = _requests(model.cfg, [(6, m) for m in (2, 3, 5, 6, 7, 8)],
+                     seed=7)
+    eng.submit_many(reqs)
+    eng.run()
+    lengths = {k[1] for k in eng._jits if isinstance(k, tuple)
+               and k[0] == "chunk"}
+    assert lengths, "no chunk executables were built"
+    assert all(n & (n - 1) == 0 for n in lengths), lengths
+
+
+def test_roofline_chunk_hook():
+    """The cost-model hook scales with model size and respects clamps."""
+    small = get_config("qwen3-0.6b-reduced")
+    big = get_config("qwen3-8b")
+    assert 1 <= decode_chunk_tokens(big) <= decode_chunk_tokens(small) <= 32
+    assert decode_chunk_tokens(small, max_chunk=4) == 4

@@ -171,9 +171,12 @@ def test_engine_interleaved_submission(small_lm):
 
 def test_step_reports_work_remaining(small_lm):
     """Non-blocking contract: step() is a no-op returning False when idle,
-    True while work remains — what lets a pool drive engines round-robin."""
+    True while work remains — what lets a pool drive engines round-robin.
+    chunk_tokens=1 pins one decode iteration per macro-step so the
+    step-by-step protocol stays observable."""
     model, params = small_lm
-    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng = ServingEngine(model, params, n_slots=2, max_len=64,
+                        chunk_tokens=1)
     assert not eng.has_work
     assert eng.step() is False
     eng.submit_many(_requests(model.cfg, 2, max_new=3))
@@ -184,6 +187,41 @@ def test_step_reports_work_remaining(small_lm):
     assert not eng.has_work
     assert len(eng.done) == 2
     assert eng.busy_s > 0.0
+    assert eng.tokens_generated == 6   # per-chunk token accounting
+
+
+def test_run_budget_counts_admit_only_steps(small_lm):
+    """Regression: ``run(max_steps)`` must budget every ``step()`` call.
+    With max_new_tokens=1 every iteration is admit-only (the request
+    finishes at prefill) — the old decode-only counter never advanced and
+    the loop could spin past its budget."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=1, max_len=64)
+    eng.submit_many(_requests(model.cfg, 5, max_new=1))
+    done = eng.run(max_steps=3)
+    assert len(done) == 3              # one admit-only step per request
+    assert eng.has_work                # budget stopped the loop, not idle
+    assert len(eng.run()) == 2         # fresh budget drains the rest
+
+
+def test_completion_latency_uses_monotonic_clock(small_lm, monkeypatch):
+    """latency_s must come from the monotonic clock (perf_counter), never
+    time.time() — a wall-clock step mid-request would corrupt it."""
+    import time as real_time
+    import types
+
+    import repro.serving.engine as engine_mod
+    model, params = small_lm
+    shim = types.SimpleNamespace(
+        perf_counter=real_time.perf_counter,
+        time=lambda: pytest.fail("engine read time.time()"))
+    monkeypatch.setattr(engine_mod, "time", shim)
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng.submit_many(_requests(model.cfg, 2, max_new=3))
+    done = eng.run()
+    assert len(done) == 2
+    for c in done:
+        assert 0.0 < c.latency_s < 600.0
 
 
 def test_batched_admission_matches_one_at_a_time(small_lm):
