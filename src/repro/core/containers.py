@@ -1,11 +1,21 @@
 """Container abstraction on a TPU pod: disjoint sub-mesh replica groups.
 
 The paper's "container with C/n CPU cores" maps to "model replica on a
-sub-mesh of chips/n chips" (DESIGN.md §2). On a pod mesh
-``(data=D, model=M)`` the factorisation is expressed *logically*: choosing
-``n`` containers re-factors the pod into ``(data=n, model=chips/n)`` with
-parameters replicated over ``data`` (no cross-container collectives) and the
-request batch split over ``data`` (core/splitter.py semantics).
+sub-mesh of chips/n chips" (DESIGN.md §2). The factorisation exists in two
+forms:
+
+  * **logical** — ``container_mesh`` builds ONE joint pod mesh
+    ``(data=n, model=chips/n)`` where the ``data`` axis is the container
+    axis (weights replicated over it, the request batch split over it —
+    core/splitter.py semantics). This is the single-program view used by
+    the dry-run and the collective roofline.
+  * **physical** — ``container_meshes`` carves the pod's device list into
+    ``n`` *disjoint* contiguous slices and builds one independent
+    ``jax.sharding.Mesh`` per container over its slice. Each container's
+    engine commits params/caches onto its own slice (serving/engine.py),
+    so n containers genuinely occupy n disjoint device sets and serve in
+    parallel with zero cross-container collectives — the paper's
+    "C/n cores per container", chip-native.
 
 ``ContainerSpec`` enumerates the feasible factorisations of a pod and their
 per-chip weight memory (weights are replicated per container — the analogue
@@ -17,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.configs.base import ArchConfig
 
@@ -74,6 +85,43 @@ def feasible_counts(cfg: ArchConfig, total_chips: int,
 
 def container_mesh(spec: ContainerSpec,
                    axis_names: tuple[str, str] = ("data", "model")):
-    """Build the jax mesh for a factorisation (requires enough devices —
-    used under the dry-run's host-device override)."""
+    """The joint (logical) mesh for a factorisation: one mesh over the
+    whole pod with the container count on the first axis (requires enough
+    devices — used under the dry-run's host-device override)."""
     return jax.make_mesh(spec.mesh_shape, axis_names)
+
+
+def partition_indices(total_chips: int, n_containers: int) -> list[range]:
+    """Pure index partition behind ``container_meshes``: ``n`` contiguous,
+    equal, disjoint ranges covering ``range(total_chips)`` — the device-set
+    invariant the property tests pin down without needing devices."""
+    if n_containers <= 0:
+        raise ValueError("n_containers must be positive")
+    if total_chips % n_containers != 0:
+        raise ValueError(
+            f"{n_containers} containers do not divide {total_chips} chips")
+    per = total_chips // n_containers
+    return [range(i * per, (i + 1) * per) for i in range(n_containers)]
+
+
+def container_meshes(spec: ContainerSpec, devices=None,
+                     axis_names: tuple[str, str] = ("data", "model")
+                     ) -> list[jax.sharding.Mesh]:
+    """The physical factorisation: one ``Mesh`` per container, each over a
+    disjoint contiguous slice of the pod's devices, shaped
+    ``(data=1, model=chips_per_container)``. Within a container the data
+    axis is trivially 1 (the container axis lives ACROSS meshes, carried
+    by the pool, not inside any one program); the model axis holds the
+    container's chips for intra-container sharding at pod scale."""
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < spec.total_chips:
+        raise ValueError(
+            f"spec wants {spec.total_chips} chips, host has {len(devices)}")
+    out = []
+    for idx in partition_indices(spec.total_chips, spec.n_containers):
+        arr = np.empty((1, spec.chips_per_container), dtype=object)
+        for j, i in enumerate(idx):
+            arr[0, j] = devices[i]
+        out.append(jax.sharding.Mesh(arr, axis_names))
+    return out

@@ -15,11 +15,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_container_mesh(total_chips: int, n_containers: int):
-    """The paper's factorisation: n containers × (chips/n) model shards.
-    The "data" axis is the container axis (weights replicated across it)."""
+    """The paper's factorisation as ONE joint mesh: n containers ×
+    (chips/n) model shards. The "data" axis is the container axis (weights
+    replicated across it) — the logical view for dry-runs/rooflines."""
     assert total_chips % n_containers == 0
     return make_mesh(
         (n_containers, total_chips // n_containers), ("data", "model"))
+
+
+def make_container_meshes(total_chips: int, n_containers: int,
+                          devices=None):
+    """The paper's factorisation as n PHYSICAL meshes: one
+    ``(data=1, model=chips/n)`` mesh per container, each over a disjoint
+    contiguous slice of the pod's device list. Engines committed to these
+    meshes occupy pairwise-disjoint device sets (serving/engine.py), so a
+    concurrent pool overlaps real parallel hardware. On CPU CI, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to fake a pod."""
+    from repro.core.containers import ContainerSpec, container_meshes
+    # divisibility is enforced by partition_indices inside container_meshes
+    spec = ContainerSpec(n_containers, total_chips // n_containers,
+                         total_chips)
+    return container_meshes(spec, devices)
 
 
 def mesh_axis_size(mesh, name: str) -> int:

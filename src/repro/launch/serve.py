@@ -4,11 +4,16 @@ request stream, with the online divide-and-save scheduler.
 Fixed count: one concurrent pool. ``--containers 0`` (default) runs the
 adaptive loop — waves of traffic, each served at the scheduler's current
 pick within the memory-feasible counts, each observation refining the
-fitted time/energy models.
+fitted time/energy models. ``--submesh`` makes the containers physical:
+each engine is committed to a disjoint slice of the host's jax devices
+(fake a pod on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --containers 4 --requests 16
     PYTHONPATH=src python -m repro.launch.serve --waves 8 --objective time
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --containers 2 --submesh
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.core.containers import feasible_counts
+from repro.launch.mesh import make_container_meshes
 from repro.models.model import Model
 from repro.serving import (AdaptiveServingPool, ContainerServingPool,
                            Request)
@@ -40,12 +46,24 @@ def main() -> None:
                     help="disable container concurrency (baseline)")
     ap.add_argument("--units", type=int, default=8,
                     help="resource units to factorise (cores / chips)")
+    ap.add_argument("--submesh", action="store_true",
+                    help="place each container on a disjoint sub-mesh of "
+                         "the host's jax devices (see XLA_FLAGS above)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-reduced")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+
+    units = args.units
+    if args.submesh:
+        # factorise devices that actually exist: largest power of two the
+        # pod (or the CPU device-count override) provides, clamped by an
+        # explicit --units so a smaller requested factorisation is honoured
+        units = 1 << (min(args.units, jax.device_count()).bit_length() - 1)
+        print(f"submesh placement over {units} of {jax.device_count()} "
+              f"devices")
 
     def batch_of_requests(base):
         return [Request(rid=base + i,
@@ -55,9 +73,12 @@ def main() -> None:
                 for i in range(args.requests)]
 
     if args.containers:
+        meshes = (make_container_meshes(units, args.containers)
+                  if args.submesh else None)
         pool = ContainerServingPool(model, params, args.containers,
                                     n_slots_per_container=args.slots,
-                                    concurrent=not args.sequential)
+                                    concurrent=not args.sequential,
+                                    meshes=meshes)
         done, per, wall, energy = pool.serve_timed(batch_of_requests(0))
         toks = sum(len(c.tokens) for c in done)
         mode = "sequential" if args.sequential else "concurrent"
@@ -65,23 +86,32 @@ def main() -> None:
               f"{toks} tokens in {wall:.2f}s ({toks/wall:.1f} tok/s, "
               f"~{energy:.1f}J)")
         for r in per:
+            devs = ""
+            if meshes is not None:
+                ids = sorted(d.id for d in meshes[r.container_id].devices.flat)
+                devs = f" devices {ids}"
             print(f"  container {r.container_id}: {r.n_requests} reqs "
                   f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
-                  f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J")
+                  f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J "
+                  f"p50 {r.latency_p50_s:.3f}s p95 {r.latency_p95_s:.3f}s"
+                  f"{devs}")
         return
 
     # online mode: the scheduler probes container counts across waves,
     # bounded by the memory-feasible factorisations of the host
-    feasible = feasible_counts(cfg, args.units) or [1]
+    feasible = feasible_counts(cfg, units) or [1]
     apool = AdaptiveServingPool(model, params, feasible,
                                 objective=args.objective, epsilon=0.2,
                                 n_slots_per_container=args.slots,
-                                concurrent=not args.sequential)
+                                concurrent=not args.sequential,
+                                submesh_devices=units if args.submesh
+                                else None)
     for wave in range(args.waves):
         apool.serve_wave(batch_of_requests(wave * args.requests))
         w = apool.history[-1]
         print(f"wave {w.wave}: n={w.n_containers} wall {w.wall_s:.2f}s "
-              f"{w.tokens_per_s:.1f} tok/s energy {w.energy_j:.1f}J")
+              f"{w.tokens_per_s:.1f} tok/s energy {w.energy_j:.1f}J "
+              f"p50 {w.latency_p50_s:.3f}s p95 {w.latency_p95_s:.3f}s")
     print(f"feasible counts: {feasible}")
     print(f"converged choice: n={apool.choice}")
     print("scheduler summary:", apool.scheduler.summary())

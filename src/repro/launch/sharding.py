@@ -75,6 +75,17 @@ class ShardingRules:
         self.batch_axes = (("pod", "data") if self.pod > 1 else ("data",))
         self.data_total = self.data * self.pod
 
+    @property
+    def device_set(self) -> frozenset:
+        """The devices this rules instance places onto (empty for abstract
+        meshes) — a container pool checks these are pairwise disjoint."""
+        try:
+            devs = self.mesh.devices
+        except (AttributeError, ValueError):
+            # AbstractMesh has no devices (0.4.x raises ValueError)
+            return frozenset()
+        return frozenset(devs.flat)
+
     # ------------------------------------------------------------------
     def _ns(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
@@ -260,3 +271,27 @@ class ShardingRules:
 
     def replicated(self, struct: Any) -> Any:
         return jax.tree.map(lambda _: self._ns(P()), struct)
+
+    # ------------------------------------------------------------------
+    # container placement (sub-mesh serving)
+    # ------------------------------------------------------------------
+    def container_placement(self, struct: Any) -> Any:
+        """Placement for one container's params/caches on its sub-mesh:
+        replicated across the slice. The container axis carries the
+        parallelism (containers are full replicas — the paper's model);
+        intra-container tensor parallelism (``params()``/``cache()`` on
+        the same sub-mesh) is the pod-scale extension, but it changes
+        matmul reduction order, so the bit-parity contract between n and
+        the single-device baseline holds only for replicas."""
+        return self.replicated(struct)
+
+
+def tree_device_set(tree: Any) -> frozenset:
+    """Union of the device sets of every committed leaf in ``tree`` —
+    what the sub-mesh placement tests assert disjointness over."""
+    out: set = set()
+    for leaf in jax.tree.leaves(tree):
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            out |= set(sharding.device_set)
+    return frozenset(out)

@@ -12,7 +12,16 @@ containers).
 
 Pools are cached per count, so converging traffic stops paying refactor
 cost: once the scheduler settles, every wave reuses the same engines and
-their compiled executables.
+their compiled executables. With ``submesh_devices`` set, each count's pool
+places its engines on disjoint device sub-meshes
+(``launch/mesh.make_container_meshes``) — re-placing engines when the
+scheduler changes n is then just a pool-cache lookup: the params were
+device_put onto each count's slices once, at that pool's construction.
+Every cached pool keeps its placed replicas resident, though, and
+``core/containers.feasible_counts`` budgets a SINGLE placement — for
+models near the HBM limit bound the cache with ``max_cached_pools`` (LRU
+eviction drops the stalest pool's placements; re-probing that count later
+pays one fresh placement, which exploration does rarely by design).
 
 ``SyntheticContainerPool`` is the simulator counterpart (paper §VI): a
 pool whose time/energy come from closed-form profiles instead of a device,
@@ -27,7 +36,8 @@ from typing import Any, Callable, Sequence
 from repro.core.scheduler import DivideAndSaveScheduler, Objective
 from repro.models.model import Model
 from repro.serving.engine import Completion, Request
-from repro.serving.pool import ContainerResult, ContainerServingPool
+from repro.serving.pool import (ContainerResult, ContainerServingPool,
+                                latency_percentiles)
 
 
 @dataclasses.dataclass
@@ -39,6 +49,8 @@ class WaveResult:
     n_requests: int
     n_tokens: int = 0             # tokens emitted across the wave
     tokens_per_s: float = 0.0     # wave decode throughput
+    latency_p50_s: float = 0.0    # median completion latency in the wave
+    latency_p95_s: float = 0.0    # tail completion latency in the wave
 
 
 class AdaptiveServingPool:
@@ -52,26 +64,55 @@ class AdaptiveServingPool:
                  n_slots_per_container: int = 4, max_len: int = 512,
                  concurrent: bool = True,
                  scheduler: DivideAndSaveScheduler | None = None,
-                 pool_factory: Callable[[int], Any] | None = None):
+                 pool_factory: Callable[[int], Any] | None = None,
+                 submesh_devices: int | None = None,
+                 max_cached_pools: int | None = None):
+        """``submesh_devices``: factorise this many devices into disjoint
+        per-container sub-meshes for every count the scheduler may pick
+        (each count must divide it — use power-of-two feasible counts).
+        ``max_cached_pools``: LRU-bound the per-count pool cache (each
+        cached pool pins a full set of placed param replicas)."""
         self.scheduler = scheduler or DivideAndSaveScheduler(
             list(feasible_counts), objective=objective,
             deadline_s=deadline_s, epsilon=epsilon, seed=seed)
+        if submesh_devices is not None:
+            # fail fast: a non-divisor count would otherwise crash mid-
+            # serving, the first time the scheduler probes it
+            counts = getattr(self.scheduler, "feasible",
+                             list(feasible_counts))
+            bad = [n for n in counts if submesh_devices % n != 0]
+            if bad:
+                raise ValueError(
+                    f"feasible counts {bad} do not divide "
+                    f"{submesh_devices} submesh devices")
         if pool_factory is None:
             if model is None:
                 raise ValueError("need a model or a pool_factory")
 
             def pool_factory(n: int) -> ContainerServingPool:
+                meshes = None
+                if submesh_devices is not None:
+                    from repro.launch.mesh import make_container_meshes
+                    meshes = make_container_meshes(submesh_devices, n)
                 return ContainerServingPool(
                     model, params, n,
                     n_slots_per_container=n_slots_per_container,
-                    max_len=max_len, concurrent=concurrent)
+                    max_len=max_len, concurrent=concurrent, meshes=meshes)
         self._pool_factory = pool_factory
-        self._pools: dict[int, Any] = {}
+        self._pools: dict[int, Any] = {}       # insertion order == LRU order
+        self._max_cached = max_cached_pools
         self.history: list[WaveResult] = []
 
     def _pool(self, n: int):
-        if n not in self._pools:
+        if n in self._pools:
+            self._pools[n] = self._pools.pop(n)    # refresh LRU position
+        else:
             self._pools[n] = self._pool_factory(n)
+            if self._max_cached is not None:
+                while len(self._pools) > max(self._max_cached, 1):
+                    # evict the stalest count; dropping the pool releases
+                    # its engines' placed params/caches
+                    self._pools.pop(next(iter(self._pools)))
         return self._pools[n]
 
     def serve_wave(self, requests: list[Request]) -> list[Completion]:
@@ -79,9 +120,11 @@ class AdaptiveServingPool:
         ordered, _, wall, energy = self._pool(n).serve_timed(requests)
         self.scheduler.observe(n, wall, energy)
         n_tokens = sum(len(c.tokens) for c in ordered)
+        p50, p95 = latency_percentiles(ordered)
         self.history.append(WaveResult(len(self.history), n, wall, energy,
                                        len(requests), n_tokens,
-                                       n_tokens / wall if wall > 0 else 0.0))
+                                       n_tokens / wall if wall > 0 else 0.0,
+                                       p50, p95))
         return ordered
 
     def serve(self, waves) -> list[list[Completion]]:

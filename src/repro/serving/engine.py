@@ -36,7 +36,18 @@ granularity, so pools can surface per-container tokens/s.
 
 Engines sharing one ``Model`` share jitted prefill/decode executables
 (module-level cache) so an n-container pool compiles each shape once, not
-n times.
+n times (jit re-specialises per device placement under that cache, so
+engines on different sub-meshes stay correct).
+
+An engine can be **pinned to a sub-mesh**: pass ``mesh`` (one of the
+disjoint per-container meshes from ``launch/mesh.make_container_meshes``)
+and the engine instantiates ``ShardingRules`` on it and commits its params
+and KV cache onto that device slice with ONE ``jax.device_put`` replication
+at construction — reused across every wave the pool serves. All jitted
+calls then execute on the sub-mesh (committed inputs pin the computation),
+cache donation included, and outputs never leave the slice; replicated
+placement keeps the container bit-identical to the single-device baseline
+(see launch/sharding.ShardingRules.container_placement).
 
 This is the per-container serving loop; core/splitter.py +
 serving/pool.py run n of these over disjoint resource shares — the paper's
@@ -109,12 +120,34 @@ class ServingEngine:
                  max_len: int = 512, dtype=jnp.float32,
                  greedy: bool = True, seed: int = 0,
                  batch_admit: bool = True, chunked: bool = True,
-                 chunk_tokens: int | None = None):
+                 chunk_tokens: int | None = None,
+                 mesh=None, rules=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.cache = model.init_cache(n_slots, max_len, dtype)
+        self.mesh = mesh
+        self.rules = rules
+        if mesh is not None and rules is None:
+            from repro.launch.sharding import ShardingRules
+            self.rules = ShardingRules(mesh, train=False, fsdp=False)
+        if self.rules is not None:
+            # the one per-container placement: params committed onto this
+            # container's device slice (reused across waves), and the KV
+            # cache allocated directly ON the slice (out_shardings) rather
+            # than materialised on the default device and copied over —
+            # pool construction must not route n caches through device 0
+            self.params = jax.device_put(
+                params, self.rules.container_placement(params))
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(n_slots, max_len, dtype))
+            self.cache = jax.jit(
+                lambda: model.init_cache(n_slots, max_len, dtype),
+                out_shardings=self.rules.container_placement(cache_struct))()
+        else:
+            self.cache = model.init_cache(n_slots, max_len, dtype)
+        self.device_set = (self.rules.device_set if self.rules is not None
+                           else frozenset())
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.done: list[Completion] = []

@@ -4,28 +4,34 @@ Splits a batch of independent requests into n segments (core/splitter.py),
 runs one ServingEngine replica per "container", and combines completions in
 request order. The containers run **concurrently** — one worker thread per
 engine; jax releases the GIL while XLA executes, so n engines genuinely
-overlap device work on the shared host (this is the "save" half of
-divide-and-save: same total work, less wall time). On the real pod each
-replica owns a disjoint sub-mesh (core/containers.py); the multi-process
+overlap device work (this is the "save" half of divide-and-save: same
+total work, less wall time). Pass ``meshes`` (one disjoint sub-mesh per
+container — ``launch/mesh.make_container_meshes``) and each engine commits
+its params/caches onto its own device slice, so the threads overlap *real
+parallel hardware*, not one shared device; the pool validates the slices
+are pairwise disjoint at construction. Without ``meshes`` every engine
+shares the default device (the thread-overlap baseline). The multi-process
 testbed in examples/serve_video_detection.py pins real disjoint core sets
 instead.
 
 Per-container accounting: each ContainerResult carries the container's wall
 time, its busy time (wall the engine spent inside ``step()``), its emitted
 token count and tokens/s (per-chunk granularity — the engine counts tokens
-as each fused decode chunk lands), and an energy estimate from
-``EnergyProxy`` — the paper's fixed+dynamic power
-decomposition (a baseline draw shared by the containers plus an activity
-draw proportional to busy time). The proxy is what the online scheduler
-optimises on hosts with no power sensor; the calibrated device simulators
-in core/energy_model.py play that role for TX2/Orin figures.
+as each fused decode chunk lands), p50/p95 completion-latency percentiles,
+and an energy estimate from ``EnergyProxy`` — the paper's fixed+dynamic
+power decomposition (a baseline draw shared by the containers plus an
+activity draw proportional to busy time). The proxy is what the online
+scheduler optimises on hosts with no power sensor; the calibrated device
+simulators in core/energy_model.py play that role for TX2/Orin figures.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
+
+import numpy as np
 
 from repro.core import splitter
 from repro.models.model import Model
@@ -47,6 +53,16 @@ class EnergyProxy:
                 + self.idle_w * wave_wall_s / max(n_containers, 1))
 
 
+def latency_percentiles(completions: Sequence[Completion]
+                        ) -> tuple[float, float]:
+    """(p50, p95) of completion latencies, (0, 0) when empty — the
+    scheduler-facing tail-latency summary (ROADMAP: latency percentiles)."""
+    lats = [c.latency_s for c in completions]
+    if not lats:
+        return 0.0, 0.0
+    return (float(np.percentile(lats, 50)), float(np.percentile(lats, 95)))
+
+
 @dataclasses.dataclass
 class ContainerResult:
     container_id: int
@@ -57,6 +73,8 @@ class ContainerResult:
     energy_j: float = 0.0
     n_tokens: int = 0             # tokens emitted by this container
     tokens_per_s: float = 0.0     # n_tokens / wall_s (decode throughput)
+    latency_p50_s: float = 0.0    # median completion latency
+    latency_p95_s: float = 0.0    # tail completion latency
 
 
 class ContainerServingPool:
@@ -64,15 +82,29 @@ class ContainerServingPool:
                  n_slots_per_container: int = 4, max_len: int = 512,
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  concurrent: bool = True,
-                 energy: EnergyProxy | None = None):
+                 energy: EnergyProxy | None = None,
+                 meshes: Sequence[Any] | None = None):
         self.n_containers = n_containers
         self.concurrent = concurrent
         self.energy = energy or EnergyProxy()
+        if meshes is not None:
+            if len(meshes) != n_containers:
+                raise ValueError(f"{len(meshes)} meshes for "
+                                 f"{n_containers} containers")
+            sets = [frozenset(m.devices.flat) for m in meshes]
+            for i, a in enumerate(sets):
+                for b in sets[i + 1:]:
+                    if a & b:
+                        raise ValueError(
+                            "container sub-meshes overlap: "
+                            f"{sorted(d.id for d in a & b)}")
+        self.meshes = meshes
         factory = engine_factory or ServingEngine
         self.engines = [
             factory(model, params, n_slots=n_slots_per_container,
-                    max_len=max_len)
-            for _ in range(n_containers)
+                    max_len=max_len,
+                    **({"mesh": meshes[i]} if meshes is not None else {}))
+            for i in range(n_containers)
         ]
 
     # ------------------------------------------------------------------
@@ -121,9 +153,10 @@ class ContainerServingPool:
                 zip(out, segments)):
             e = self.energy.container_energy(wall, c_busy, self.n_containers)
             energy += e
+            p50, p95 = latency_percentiles(comps)
             results.append(ContainerResult(
                 cid, comps, c_wall, len(seg), c_busy, e, c_toks,
-                c_toks / c_wall if c_wall > 0 else 0.0))
+                c_toks / c_wall if c_wall > 0 else 0.0, p50, p95))
         # request-order combination: within a segment order completions by
         # the segment's submission order, then splice segments back with the
         # splitter (split/combine round-trip == original order)

@@ -56,6 +56,37 @@ def test_adaptive_reuses_pools_per_count():
     assert len(built) == len(set(built))
 
 
+def test_max_cached_pools_evicts_lru():
+    """Each cached pool pins placed param replicas; ``max_cached_pools``
+    LRU-bounds that. Eviction drops the stalest count, and re-probing it
+    later rebuilds (one fresh placement) instead of growing without
+    bound."""
+    built = []
+
+    def factory(n):
+        built.append(n)
+        return SyntheticContainerPool(n, _convex_time, _energy)
+
+    sched_picks = [1, 2, 4, 2, 1]          # 4 evicts 1; reprobe of 1 rebuilds
+
+    class FixedScheduler:
+        n_observations = 0
+
+        def pick(self):
+            return sched_picks[FixedScheduler.n_observations]
+
+        def observe(self, n, t, e):
+            FixedScheduler.n_observations += 1
+
+    apool = AdaptiveServingPool(None, None, [1, 2, 4],
+                                scheduler=FixedScheduler(),
+                                pool_factory=factory, max_cached_pools=2)
+    for _ in sched_picks:
+        apool.serve_wave([])
+    assert built == [1, 2, 4, 1]           # 2 stayed cached (LRU refresh)
+    assert set(apool._pools) == {2, 1}     # 4 was the LRU at the last miss
+
+
 def test_adaptive_wave_history_and_completions():
     apool = AdaptiveServingPool(
         None, None, [1, 2], objective="time",
@@ -67,11 +98,24 @@ def test_adaptive_wave_history_and_completions():
     w = apool.history[0]
     assert w.wave == 0 and w.n_requests == 5
     assert w.wall_s > 0 and w.energy_j > 0
+    # synthetic completions are zero-latency echoes: percentiles present
+    # on the WaveResult but degenerate
+    assert w.latency_p50_s == w.latency_p95_s == 0.0
 
 
 def test_requires_model_or_factory():
     with pytest.raises(ValueError):
         AdaptiveServingPool(None, None, [1, 2])
+
+
+def test_submesh_counts_must_divide_devices():
+    """Fail fast at construction: a feasible count that does not divide
+    the submesh device pool would otherwise crash mid-serving the first
+    time the scheduler probes it."""
+    with pytest.raises(ValueError, match="do not divide"):
+        AdaptiveServingPool(None, None, [1, 2, 4],
+                            pool_factory=synthetic_pool_factory(_convex_time),
+                            submesh_devices=6)
 
 
 def test_feasible_counts_memory_bounded():
@@ -109,3 +153,6 @@ def test_adaptive_real_model_smoke():
         assert [c.rid for c in out] == [r.rid for r in reqs]
     assert apool.scheduler.n_observations == 3
     assert apool.choice in (1, 2)
+    # real waves have real tail latencies on the WaveResult
+    assert all(0.0 < w.latency_p50_s <= w.latency_p95_s <= w.wall_s
+               for w in apool.history)

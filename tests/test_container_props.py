@@ -1,0 +1,106 @@
+"""Property tests (hypothesis) for the container factorisation and the
+split→serve→combine loop.
+
+Invariants: factorizations enumerate exactly the power-of-two divisions of
+the pod; partition_indices is a disjoint ordered cover (the device-set
+invariant behind ``container_meshes``, pinned without needing devices);
+feasible_counts is memory-bound *monotone* (more containers → more bytes
+per chip, so feasibility is a prefix of the powers of two); and the pool's
+reorder-then-splice combination restores request order no matter what
+order each container finishes its segment in.
+
+Skipped (by conftest) when hypothesis isn't installed — it lives in the
+``dev`` extra, so the CI no-hypothesis job stays green by skip.
+"""
+from __future__ import annotations
+
+import pytest
+
+# conftest's source-grep skip covers discovery runs; this covers the file
+# being named explicitly on the pytest command line (e.g. the CI lane)
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings      # noqa: E402
+from hypothesis import strategies as st     # noqa: E402
+
+from repro.configs.registry import get_config                   # noqa: E402
+from repro.core import splitter                                 # noqa: E402
+from repro.core.containers import (factorizations,              # noqa: E402
+                                   feasible_counts,
+                                   partition_indices)
+
+CFG = get_config("qwen3-0.6b-reduced")
+
+
+@given(st.integers(0, 10), st.one_of(st.none(), st.integers(1, 2048)))
+@settings(max_examples=200, deadline=None)
+def test_factorizations_enumerate_powers_of_two(k, max_containers):
+    total = 2 ** k
+    specs = factorizations(total, max_containers)
+    want = [n for n in (2 ** i for i in range(k + 1))
+            if max_containers is None or n <= max_containers]
+    assert [s.n_containers for s in specs] == want
+    for s in specs:
+        assert s.total_chips == total
+        assert s.n_containers * s.chips_per_container == total
+        assert s.mesh_shape == (s.n_containers, s.chips_per_container)
+
+
+@given(st.integers(0, 10), st.integers(0, 10))
+@settings(max_examples=200, deadline=None)
+def test_partition_indices_disjoint_ordered_cover(k, j):
+    total, n = 2 ** k, 2 ** min(j, k)
+    parts = partition_indices(total, n)
+    assert len(parts) == n
+    # concatenating the parts in container order gives back the pod's
+    # device indices exactly once each: disjoint, covering, contiguous
+    assert [i for part in parts for i in part] == list(range(total))
+    assert {len(part) for part in parts} == {total // n}
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_partition_rejects_indivisible_counts(n):
+    total = 96
+    if total % n == 0:
+        assert len(partition_indices(total, n)) == n
+    else:
+        with pytest.raises(ValueError):
+            partition_indices(total, n)
+
+
+@given(st.floats(min_value=1e3, max_value=1e15,
+                 allow_nan=False, allow_infinity=False),
+       st.integers(0, 8),
+       st.floats(min_value=0.0, max_value=0.9,
+                 allow_nan=False, allow_infinity=False))
+@settings(max_examples=200, deadline=None)
+def test_feasible_counts_memory_bound_monotone(hbm, k, headroom):
+    """Per-chip weight bytes grow with n (fewer chips per container), so
+    feasibility is downward-closed: the feasible counts are exactly the
+    first len(counts) powers of two."""
+    total = 2 ** k
+    counts = feasible_counts(CFG, total, hbm_bytes=hbm,
+                             activation_headroom=headroom)
+    assert counts == [2 ** i for i in range(len(counts))]
+    assert all(c <= total for c in counts)
+
+
+@given(st.integers(0, 120), st.integers(1, 8), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_split_serve_combine_order_roundtrip(n_items, n, rnd):
+    """The pool's combination step (reorder each container's completions
+    by its segment's submission order, then splice segments with the
+    splitter) restores the original request order regardless of the order
+    each container finished in — serve is order-invisible."""
+    rids = list(range(n_items))
+    segments = splitter.split(rids, n)
+    served_segments = []
+    for seg in segments:
+        finish_order = list(seg)
+        rnd.shuffle(finish_order)                   # container finish order
+        completions = {rid: (rid, pos)              # (rid, completion slot)
+                       for pos, rid in enumerate(finish_order)}
+        served_segments.append([completions[rid] for rid in seg])
+    combined = splitter.combine(served_segments)
+    assert [rid for rid, _ in combined] == rids

@@ -9,8 +9,8 @@ import pytest
 from repro.configs.registry import get_config
 from repro.data.pipeline import VideoRequestStream
 from repro.models.model import Model
-from repro.serving.engine import Request, ServingEngine
-from repro.serving.pool import ContainerServingPool
+from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.pool import ContainerServingPool, latency_percentiles
 
 
 @pytest.fixture(scope="module")
@@ -322,6 +322,28 @@ def test_concurrent_worker_error_propagates(small_lm):
                                 engine_factory=Boom)
     with pytest.raises(RuntimeError, match="boom"):
         pool.serve(_requests(model.cfg, 2, max_new=2))
+
+
+def test_latency_percentiles_pure():
+    comps = [Completion(i, [], 0, latency_s=float(i + 1)) for i in range(20)]
+    lats = np.arange(1.0, 21.0)
+    p50, p95 = latency_percentiles(comps)
+    assert p50 == pytest.approx(float(np.percentile(lats, 50)))
+    assert p95 == pytest.approx(float(np.percentile(lats, 95)))
+    assert p50 <= p95
+    assert latency_percentiles([]) == (0.0, 0.0)
+
+
+def test_pool_reports_latency_percentiles(small_lm):
+    """Each ContainerResult carries p50/p95 completion latency (ROADMAP's
+    scheduler-facing percentiles): positive, ordered, bounded by the
+    container's wall time (latency clocks start at admission)."""
+    model, params = small_lm
+    pool = ContainerServingPool(model, params, n_containers=2,
+                                n_slots_per_container=2, max_len=64)
+    _, per = pool.serve(_requests(model.cfg, 6, max_new=3))
+    for r in per:
+        assert 0.0 < r.latency_p50_s <= r.latency_p95_s <= r.wall_s
 
 
 def test_video_stream_requests_deterministic():
