@@ -1,6 +1,6 @@
 """Pool scaling — the "save" half of divide-and-save, measured.
 
-Two pieces of evidence:
+Three pieces of evidence:
   (a) REAL wall times: a fixed request batch served by the container pool
       at n ∈ {1, 2, 4}, sequential vs concurrent engines. Concurrency is
       thread-per-container on the shared device (jax releases the GIL
@@ -9,12 +9,19 @@ Two pieces of evidence:
   (b) the online scheduler loop on a synthetic convex time/energy profile
       (§VI-style simulation): the adaptive pool must find the known
       argmin within a handful of waves.
+  (c) ``--isolation process``: the same wave served thread-per-container
+      vs **process-per-container with pinned disjoint cpusets**
+      (serving/process_pool.py — the paper's actual ``--cpus`` mechanism)
+      at n ∈ {1, 2, 4}, emitting ``BENCH_process_pool.json``. Counts past
+      the host's core budget fall back to explicit round-robin shared
+      cores (flagged per row) rather than silently overlapping.
 
 The measured model is a mid-size reduction — large enough that XLA compute
 dominates Python dispatch, which is what lets threads overlap on CPU.
 """
 from __future__ import annotations
 
+import time
 
 from benchmarks.common import make_requests, save, save_bench, table
 from repro.configs.base import reduce_config
@@ -77,6 +84,79 @@ def adaptive_convergence(feasible=(1, 2, 4, 8), waves: int = 8):
     return picks, choices, known
 
 
+def measure_process_pool(cfg, requests, ns=(1, 2, 4), n_slots=2,
+                         max_len=128, reps: int = 2,
+                         params_seed: int = 0) -> list[dict]:
+    """Thread-per-container (shared runtime) vs process-per-container
+    (pinned disjoint cpusets) wall/energy per count. Each lane is warmed
+    (compile / spawn+compile) before timing, so rows compare steady-state
+    serving, not startup."""
+    import jax
+
+    from repro.core.testbed import available_cores
+    from repro.models.model import Model
+    from repro.serving.process_pool import ProcessContainerPool
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(params_seed))
+    avail = len(available_cores())
+    rows = []
+    for n in ns:
+        tpool = ContainerServingPool(model, params, n,
+                                     n_slots_per_container=n_slots,
+                                     max_len=max_len)
+        tpool.serve_timed(list(requests))              # compile warmup
+        thread = min((tpool.serve_timed(list(requests))[2:]
+                      for _ in range(reps)))
+        shared = n > avail
+        with ProcessContainerPool(cfg, n, n_slots_per_container=n_slots,
+                                  max_len=max_len, params_seed=params_seed,
+                                  allow_shared_cores=shared) as ppool:
+            t0 = time.perf_counter()
+            ppool.serve_timed(list(requests))          # spawn + compile
+            spawn_s = time.perf_counter() - t0
+            proc = min((ppool.serve_timed(list(requests))[2:]
+                        for _ in range(reps)))
+        rows.append({"n": n, "wall_thread_s": thread[0],
+                     "wall_process_s": proc[0],
+                     "energy_thread_j": thread[1],
+                     "energy_process_j": proc[1],
+                     "process_spawn_s": spawn_s,
+                     "shared_cores": shared})
+    return rows
+
+
+def run_process(quick: bool = False) -> str:
+    """The thread-vs-process lane: emits ``BENCH_process_pool.json``."""
+    from repro.core.testbed import available_cores
+
+    ns = (1, 2) if quick else (1, 2, 4)
+    n_requests, max_new, reps = (6, 4, 1) if quick else (16, 8, 3)
+    if quick:
+        from repro.configs.registry import get_config as _get
+        cfg = _get("qwen3-0.6b-reduced")
+    else:
+        cfg = bench_config()
+    requests = make_requests(cfg, n_requests, max_new, plen_range=(20, 60))
+    rows = measure_process_pool(cfg, requests, ns=ns, reps=reps)
+    avail = len(available_cores())
+    lines = ["# Pool scaling — thread vs process (pinned cpuset) containers",
+             "", f"{n_requests} requests × {max_new} new tokens, arch "
+             f"{cfg.name}, {avail} host cores; wall excludes spawn+compile "
+             "(warm pools)", ""]
+    lines += table(
+        ["n", "thread wall (s)", "process wall (s)", "thread E (J)",
+         "process E (J)", "spawn+compile (s)", "shared cores"],
+        [[r["n"], r["wall_thread_s"], r["wall_process_s"],
+          r["energy_thread_j"], r["energy_process_j"],
+          r["process_spawn_s"], str(r["shared_cores"])] for r in rows])
+    save_bench("process_pool", {
+        "config": cfg.name, "host_cores": avail,
+        "per_n": {str(r["n"]): {k: v for k, v in r.items() if k != "n"}
+                  for r in rows}})
+    return save("pool_scaling_process", {"measured": rows}, lines)
+
+
 def run(quick: bool = False) -> str:
     import jax
 
@@ -123,4 +203,18 @@ def run(quick: bool = False) -> str:
 
 
 if __name__ == "__main__":
-    print(run())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", "--smoke", action="store_true", dest="quick",
+                    help="tiny config / fewer counts (CI smoke)")
+    ap.add_argument("--isolation", default="thread",
+                    choices=("thread", "process"),
+                    help="thread: sequential-vs-concurrent lane (default); "
+                         "process: thread-vs-pinned-process lane emitting "
+                         "BENCH_process_pool.json")
+    args = ap.parse_args()
+    if args.isolation == "process":
+        print(run_process(quick=args.quick))
+    else:
+        print(run(quick=args.quick))

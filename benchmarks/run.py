@@ -43,6 +43,11 @@ def main() -> int:
     print(pool_scaling.run(quick=args.quick))
 
     print("=" * 72)
+    print("pool_scaling (process) — thread vs pinned-process containers")
+    print("=" * 72)
+    print(pool_scaling.run_process(quick=args.quick))
+
+    print("=" * 72)
     print("decode_throughput — fused chunked decode vs per-token")
     print("=" * 72)
     print(decode_throughput.run(quick=args.quick))

@@ -96,8 +96,11 @@ class DivideAndSaveScheduler:
         trust = (self.time_model.rmse / max(t_mean, 1e-9) < self.RMSE_TRUST
                  and self.energy_model.rmse / max(e_mean, 1e-9)
                  < self.RMSE_TRUST)
-        best_n, best_v = None, None
-        for n in self.feasible:
+
+        def predict(n: int) -> tuple[float, float]:
+            """(time, energy) for count n — fitted when the fit passed the
+            trust check, observed means otherwise (same source everywhere,
+            including the deadline-infeasible fallback below)."""
             t = float(self.time_model(n))
             e = float(self.energy_model(n))
             if not trust:  # poor fit: prefer the measured means
@@ -105,6 +108,11 @@ class DivideAndSaveScheduler:
                 e_obs = self._observed_mean(n, "energy_j")
                 t = t_obs if t_obs is not None else t
                 e = e_obs if e_obs is not None else e
+            return t, e
+
+        best_n, best_v = None, None
+        for n in self.feasible:
+            t, e = predict(n)
             if self.objective == "time":
                 v = t
             elif self.objective == "energy":
@@ -116,8 +124,10 @@ class DivideAndSaveScheduler:
             if best_v is None or v < best_v:
                 best_n, best_v = n, v
         if best_n is None:       # deadline infeasible everywhere: fall back
-            best_n = min(self.feasible,
-                         key=lambda n: float(self.time_model(n)))
+            # to the fastest count by the SAME trusted source — consulting
+            # the fitted model here when the trust check just rejected it
+            # would hand an untrusted argmin straight to the caller
+            best_n = min(self.feasible, key=lambda n: predict(n)[0])
         return best_n
 
     def best(self) -> int:

@@ -4,16 +4,22 @@ request stream, with the online divide-and-save scheduler.
 Fixed count: one concurrent pool. ``--containers 0`` (default) runs the
 adaptive loop — waves of traffic, each served at the scheduler's current
 pick within the memory-feasible counts, each observation refining the
-fitted time/energy models. ``--submesh`` makes the containers physical:
-each engine is committed to a disjoint slice of the host's jax devices
-(fake a pod on CPU with
+fitted time/energy models. ``--submesh`` makes the containers physical on
+the *device* axis: each engine is committed to a disjoint slice of the
+host's jax devices (fake a pod on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+``--isolation process`` makes them physical on the *CPU* axis instead —
+one OS process per container pinned to a disjoint core set before jax
+initialises (the paper's ``docker run --cpus=C/n``, see
+serving/process_pool.py); ``--total-cores`` bounds the carve-up.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --containers 4 --requests 16
     PYTHONPATH=src python -m repro.launch.serve --waves 8 --objective time
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --containers 2 --submesh
+    PYTHONPATH=src python -m repro.launch.serve --containers 2 \
+        --isolation process --total-cores 2
 """
 from __future__ import annotations
 
@@ -24,10 +30,11 @@ import numpy as np
 
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.core.containers import feasible_counts
+from repro.core.testbed import available_cores
 from repro.launch.mesh import make_container_meshes
 from repro.models.model import Model
 from repro.serving import (AdaptiveServingPool, ContainerServingPool,
-                           Request)
+                           ProcessContainerPool, Request)
 
 
 def main() -> None:
@@ -49,7 +56,18 @@ def main() -> None:
     ap.add_argument("--submesh", action="store_true",
                     help="place each container on a disjoint sub-mesh of "
                          "the host's jax devices (see XLA_FLAGS above)")
+    ap.add_argument("--isolation", default="thread",
+                    choices=("thread", "process"),
+                    help="thread: engines overlap in this process "
+                         "(baseline); process: one pinned OS process per "
+                         "container — the paper's --cpus shares")
+    ap.add_argument("--total-cores", type=int, default=None,
+                    help="CPU cores to carve among process containers "
+                         "(default: all cores this process may use)")
     args = ap.parse_args()
+    if args.isolation == "process" and args.submesh:
+        ap.error("--submesh needs one process owning all devices; pick "
+                 "either --submesh or --isolation process")
 
     cfg = get_config(args.arch + "-reduced")
     model = Model(cfg)
@@ -57,6 +75,12 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     units = args.units
+    if args.isolation == "process":
+        # factorise cores that actually exist: the process pool carves
+        # REAL cpusets, so the unit budget is the core budget
+        avail = len(available_cores())
+        units = min(units, args.total_cores or avail, avail)
+        print(f"process isolation over {units} cores")
     if args.submesh:
         # factorise devices that actually exist: largest power of two the
         # pod (or the CPU device-count override) provides, clamped by an
@@ -73,15 +97,22 @@ def main() -> None:
                 for i in range(args.requests)]
 
     if args.containers:
-        meshes = (make_container_meshes(units, args.containers)
-                  if args.submesh else None)
-        pool = ContainerServingPool(model, params, args.containers,
-                                    n_slots_per_container=args.slots,
-                                    concurrent=not args.sequential,
-                                    meshes=meshes)
+        meshes = None
+        if args.isolation == "process":
+            pool = ProcessContainerPool(cfg, args.containers,
+                                        n_slots_per_container=args.slots,
+                                        total_cores=units, params_seed=0)
+        else:
+            meshes = (make_container_meshes(units, args.containers)
+                      if args.submesh else None)
+            pool = ContainerServingPool(model, params, args.containers,
+                                        n_slots_per_container=args.slots,
+                                        concurrent=not args.sequential,
+                                        meshes=meshes)
         done, per, wall, energy = pool.serve_timed(batch_of_requests(0))
         toks = sum(len(c.tokens) for c in done)
-        mode = "sequential" if args.sequential else "concurrent"
+        mode = (args.isolation if args.isolation == "process" else
+                ("sequential" if args.sequential else "concurrent"))
         print(f"n={args.containers} ({mode}): {len(done)} requests, "
               f"{toks} tokens in {wall:.2f}s ({toks/wall:.1f} tok/s, "
               f"~{energy:.1f}J)")
@@ -90,11 +121,16 @@ def main() -> None:
             if meshes is not None:
                 ids = sorted(d.id for d in meshes[r.container_id].devices.flat)
                 devs = f" devices {ids}"
+            if args.isolation == "process":
+                cores = pool.reported_core_sets[r.container_id]
+                devs = f" cores {sorted(cores)}"
             print(f"  container {r.container_id}: {r.n_requests} reqs "
                   f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
                   f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J "
                   f"p50 {r.latency_p50_s:.3f}s p95 {r.latency_p95_s:.3f}s"
                   f"{devs}")
+        if args.isolation == "process":
+            pool.close()
         return
 
     # online mode: the scheduler probes container counts across waves,
@@ -105,7 +141,10 @@ def main() -> None:
                                 n_slots_per_container=args.slots,
                                 concurrent=not args.sequential,
                                 submesh_devices=units if args.submesh
-                                else None)
+                                else None,
+                                isolation=args.isolation,
+                                total_cores=units if args.isolation ==
+                                "process" else None)
     for wave in range(args.waves):
         apool.serve_wave(batch_of_requests(wave * args.requests))
         w = apool.history[-1]
@@ -115,6 +154,7 @@ def main() -> None:
     print(f"feasible counts: {feasible}")
     print(f"converged choice: n={apool.choice}")
     print("scheduler summary:", apool.scheduler.summary())
+    apool.close()
 
 
 if __name__ == "__main__":

@@ -4,7 +4,9 @@ from repro.serving.adaptive import (AdaptiveServingPool,
 from repro.serving.engine import Completion, Request, ServingEngine
 from repro.serving.pool import (ContainerResult, ContainerServingPool,
                                 EnergyProxy)
+from repro.serving.process_pool import ProcessContainerPool, save_params
 
 __all__ = ["Completion", "Request", "ServingEngine", "ContainerResult",
            "ContainerServingPool", "EnergyProxy", "AdaptiveServingPool",
-           "SyntheticContainerPool", "WaveResult", "synthetic_pool_factory"]
+           "SyntheticContainerPool", "WaveResult", "synthetic_pool_factory",
+           "ProcessContainerPool", "save_params"]

@@ -12,7 +12,10 @@ containers).
 
 Pools are cached per count, so converging traffic stops paying refactor
 cost: once the scheduler settles, every wave reuses the same engines and
-their compiled executables. With ``submesh_devices`` set, each count's pool
+their compiled executables. With ``isolation="process"`` the cached pools
+are ``ProcessContainerPool``s: each count keeps its pinned child processes
+warm (spawn + compile paid once per count, at first probe), which is what
+makes real OS-level CPU shares affordable inside an online loop. With ``submesh_devices`` set, each count's pool
 places its engines on disjoint device sub-meshes
 (``launch/mesh.make_container_meshes``) — re-placing engines when the
 scheduler changes n is then just a pool-cache lookup: the params were
@@ -66,30 +69,72 @@ class AdaptiveServingPool:
                  scheduler: DivideAndSaveScheduler | None = None,
                  pool_factory: Callable[[int], Any] | None = None,
                  submesh_devices: int | None = None,
-                 max_cached_pools: int | None = None):
+                 max_cached_pools: int | None = None,
+                 isolation: str = "thread",
+                 total_cores: int | None = None,
+                 params_seed: int = 0,
+                 allow_shared_cores: bool = False):
         """``submesh_devices``: factorise this many devices into disjoint
         per-container sub-meshes for every count the scheduler may pick
         (each count must divide it — use power-of-two feasible counts).
         ``max_cached_pools``: LRU-bound the per-count pool cache (each
-        cached pool pins a full set of placed param replicas)."""
+        cached pool pins a full set of placed param replicas — or, for
+        process isolation, a full set of warm child processes; evicted
+        pools are ``close()``d so children never leak).
+        ``isolation``: ``"thread"`` (engines overlap as threads in this
+        process — the shared-runtime baseline, and the only mode that
+        composes with ``submesh_devices``) or ``"process"`` (one pinned OS
+        process per container, the paper's ``--cpus`` shares —
+        serving/process_pool.py; ``total_cores`` bounds the carve-up and
+        each count's pool keeps its children warm, so the scheduler's
+        converged count stops paying spawn+compile cost).
+        ``params_seed``: process children rebuild params as
+        ``model.init(PRNGKey(params_seed))`` — pass the seed that built
+        ``params`` so both isolation modes serve identical weights."""
         self.scheduler = scheduler or DivideAndSaveScheduler(
             list(feasible_counts), objective=objective,
             deadline_s=deadline_s, epsilon=epsilon, seed=seed)
+        counts = getattr(self.scheduler, "feasible", list(feasible_counts))
+        if isolation not in ("thread", "process"):
+            raise ValueError(f"unknown isolation {isolation!r}")
         if submesh_devices is not None:
+            if isolation == "process":
+                raise ValueError(
+                    "submesh placement needs one process owning the whole "
+                    "device pool — use isolation='thread' with "
+                    "submesh_devices, or isolation='process' without")
             # fail fast: a non-divisor count would otherwise crash mid-
             # serving, the first time the scheduler probes it
-            counts = getattr(self.scheduler, "feasible",
-                             list(feasible_counts))
             bad = [n for n in counts if submesh_devices % n != 0]
             if bad:
                 raise ValueError(
                     f"feasible counts {bad} do not divide "
                     f"{submesh_devices} submesh devices")
+        if isolation == "process" and not allow_shared_cores:
+            # same fail-fast courtesy for the core carve-up: a count past
+            # the core budget cannot be pairwise disjoint
+            from repro.core.testbed import available_cores
+            budget = total_cores or len(available_cores())
+            bad = [n for n in counts if n > budget]
+            if bad:
+                raise ValueError(
+                    f"feasible counts {bad} exceed the {budget}-core "
+                    "budget; drop them, raise total_cores, or pass "
+                    "allow_shared_cores=True")
         if pool_factory is None:
             if model is None:
                 raise ValueError("need a model or a pool_factory")
 
-            def pool_factory(n: int) -> ContainerServingPool:
+            def pool_factory(n: int):
+                if isolation == "process":
+                    from repro.serving.process_pool import \
+                        ProcessContainerPool
+                    return ProcessContainerPool(
+                        model.cfg, n,
+                        n_slots_per_container=n_slots_per_container,
+                        max_len=max_len, total_cores=total_cores,
+                        params_seed=params_seed,
+                        allow_shared_cores=allow_shared_cores)
                 meshes = None
                 if submesh_devices is not None:
                     from repro.launch.mesh import make_container_meshes
@@ -111,9 +156,23 @@ class AdaptiveServingPool:
             if self._max_cached is not None:
                 while len(self._pools) > max(self._max_cached, 1):
                     # evict the stalest count; dropping the pool releases
-                    # its engines' placed params/caches
-                    self._pools.pop(next(iter(self._pools)))
+                    # its engines' placed params/caches — and shuts down
+                    # warm child processes for process-isolation pools
+                    evicted = self._pools.pop(next(iter(self._pools)))
+                    close = getattr(evicted, "close", None)
+                    if close is not None:
+                        close()
         return self._pools[n]
+
+    def close(self) -> None:
+        """Release every cached pool (shutting down any warm process
+        containers). The adaptive pool is reusable after this — the next
+        wave simply rebuilds its pool."""
+        pools, self._pools = list(self._pools.values()), {}
+        for pool in pools:
+            close = getattr(pool, "close", None)
+            if close is not None:
+                close()
 
     def serve_wave(self, requests: list[Request]) -> list[Completion]:
         n = self.scheduler.pick()

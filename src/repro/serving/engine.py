@@ -89,7 +89,10 @@ def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return n
+    # past the table: round up to the next power of two, so ragged long
+    # prompts share prefill executables instead of each distinct length
+    # compiling its own (a compile spike mid-serving)
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -97,6 +100,7 @@ class _Slot:
     active: bool = False
     rid: int = -1
     pos: int = 0                  # next position to write
+    prompt_len: int = 0           # true prompt length, recorded at admission
     remaining: int = 0
     generated: list = dataclasses.field(default_factory=list)
     started: float = 0.0          # perf_counter stamp (monotonic)
@@ -178,10 +182,18 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.max_new_tokens <= 0:
+            # zero-budget requests complete empty without touching the
+            # device: seeding a slot would emit the prefill sample, one
+            # token the request never asked for. Handled at submission so
+            # the admission fast path never rescans the queue for them.
+            self.done.append(Completion(req.rid, [], len(req.prompt)))
+            return
         self.queue.append(req)
 
     def submit_many(self, reqs) -> None:
-        self.queue.extend(reqs)
+        for r in reqs:
+            self.submit(r)
 
     @property
     def has_work(self) -> bool:
@@ -292,6 +304,7 @@ class ServingEngine:
             slot.active = True
             slot.rid = r.rid
             slot.pos = nv + len(r.prompt)     # next write position
+            slot.prompt_len = len(r.prompt)
             slot.remaining = r.max_new_tokens - 1
             slot.generated = [int(first[j])]
             slot.started = now
@@ -307,7 +320,9 @@ class ServingEngine:
 
     def _finish(self, i: int) -> None:
         s = self.slots[i]
-        self.done.append(Completion(s.rid, s.generated, s.pos,
+        # prompt_len recorded at admission: s.pos here is prompt length
+        # PLUS generated tokens (plus n_vision_tokens), not the prompt
+        self.done.append(Completion(s.rid, s.generated, s.prompt_len,
                                     time.perf_counter() - s.started))
         self.slots[i] = _Slot()
 

@@ -10,9 +10,11 @@ container — ``launch/mesh.make_container_meshes``) and each engine commits
 its params/caches onto its own device slice, so the threads overlap *real
 parallel hardware*, not one shared device; the pool validates the slices
 are pairwise disjoint at construction. Without ``meshes`` every engine
-shares the default device (the thread-overlap baseline). The multi-process
-testbed in examples/serve_video_detection.py pins real disjoint core sets
-instead.
+shares the default device (the thread-overlap baseline). For OS-level
+CPU shares — one pinned process per container, the paper's actual
+``docker run --cpus`` mechanism — use
+``serving/process_pool.ProcessContainerPool``, which shares this module's
+per-wave accounting via ``assemble_wave``.
 
 Per-container accounting: each ContainerResult carries the container's wall
 time, its busy time (wall the engine spent inside ``step()``), its emitted
@@ -75,6 +77,35 @@ class ContainerResult:
     tokens_per_s: float = 0.0     # n_tokens / wall_s (decode throughput)
     latency_p50_s: float = 0.0    # median completion latency
     latency_p95_s: float = 0.0    # tail completion latency
+
+
+def assemble_wave(out: Sequence[tuple], segments: Sequence[Sequence[Request]],
+                  wall: float, energy: EnergyProxy
+                  ) -> tuple[list[Completion], list[ContainerResult], float]:
+    """Shared per-wave accounting for every pool flavour (thread, process,
+    sub-mesh): turn raw per-container ``(completions, wall, busy, tokens)``
+    tuples into ContainerResults with energy/percentiles, and combine the
+    completions back into request order (split/combine round-trip ==
+    original order). Returns ``(ordered, results, wave_energy_j)``."""
+    n_containers = len(segments)
+    results, total_e = [], 0.0
+    for cid, ((comps, c_wall, c_busy, c_toks), seg) in enumerate(
+            zip(out, segments)):
+        e = energy.container_energy(wall, c_busy, n_containers)
+        total_e += e
+        p50, p95 = latency_percentiles(comps)
+        results.append(ContainerResult(
+            cid, comps, c_wall, len(seg), c_busy, e, c_toks,
+            c_toks / c_wall if c_wall > 0 else 0.0, p50, p95))
+    # request-order combination: within a segment order completions by
+    # the segment's submission order, then splice segments back with the
+    # splitter
+    per_segment = []
+    for res, seg in zip(results, segments):
+        by_rid = {c.rid: c for c in res.completions}
+        per_segment.append([by_rid[r.rid] for r in seg if r.rid in by_rid])
+    ordered = splitter.combine(per_segment)
+    return ordered, results, total_e
 
 
 class ContainerServingPool:
@@ -147,25 +178,8 @@ class ContainerServingPool:
         for e in out:
             if isinstance(e, BaseException):
                 raise e
-
-        results, energy = [], 0.0
-        for cid, ((comps, c_wall, c_busy, c_toks), seg) in enumerate(
-                zip(out, segments)):
-            e = self.energy.container_energy(wall, c_busy, self.n_containers)
-            energy += e
-            p50, p95 = latency_percentiles(comps)
-            results.append(ContainerResult(
-                cid, comps, c_wall, len(seg), c_busy, e, c_toks,
-                c_toks / c_wall if c_wall > 0 else 0.0, p50, p95))
-        # request-order combination: within a segment order completions by
-        # the segment's submission order, then splice segments back with the
-        # splitter (split/combine round-trip == original order)
-        per_segment = []
-        for res, seg in zip(results, segments):
-            by_rid = {c.rid: c for c in res.completions}
-            per_segment.append([by_rid[r.rid] for r in seg
-                                if r.rid in by_rid])
-        ordered = splitter.combine(per_segment)
+        ordered, results, energy = assemble_wave(out, segments, wall,
+                                                 self.energy)
         return ordered, results, wall, energy
 
     def serve(self, requests: list[Request],

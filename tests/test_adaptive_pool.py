@@ -87,6 +87,39 @@ def test_max_cached_pools_evicts_lru():
     assert set(apool._pools) == {2, 1}     # 4 was the LRU at the last miss
 
 
+def test_evicted_pools_are_closed():
+    """A pool dropped by the LRU bound (or by close()) must have its
+    close() called — for process isolation that is what shuts the warm
+    child processes down instead of leaking them."""
+    closed = []
+
+    class ClosingPool(SyntheticContainerPool):
+        def close(self):
+            closed.append(self.n_containers)
+
+    sched_picks = [1, 2, 4]
+
+    class FixedScheduler:
+        n_observations = 0
+
+        def pick(self):
+            return sched_picks[FixedScheduler.n_observations]
+
+        def observe(self, n, t, e):
+            FixedScheduler.n_observations += 1
+
+    apool = AdaptiveServingPool(
+        None, None, [1, 2, 4], scheduler=FixedScheduler(),
+        pool_factory=lambda n: ClosingPool(n, _convex_time, _energy),
+        max_cached_pools=2)
+    for _ in sched_picks:
+        apool.serve_wave([])
+    assert closed == [1]                   # LRU eviction closed count 1
+    apool.close()
+    assert sorted(closed) == [1, 2, 4]     # close() drains the rest
+    assert apool._pools == {}
+
+
 def test_adaptive_wave_history_and_completions():
     apool = AdaptiveServingPool(
         None, None, [1, 2], objective="time",

@@ -88,6 +88,27 @@ def test_rejects_empty_feasible_set():
         DivideAndSaveScheduler([])
 
 
+def test_untrusted_fit_deadline_fallback_uses_observed_means():
+    """Regression: when every count misses the deadline AND the fit failed
+    the RMSE_TRUST check, the fallback used to rank counts by the rejected
+    fitted model anyway. It must rank by observed time means — the same
+    source the main loop just fell back to."""
+    from repro.core.energy_model import FittedModel
+
+    sched = DivideAndSaveScheduler([1, 2, 4],
+                                   objective="energy_under_deadline",
+                                   deadline_s=0.5, epsilon=0.0)
+    for n, t in ((1, 5.0), (2, 1.0), (4, 9.0)):   # observed fastest: n=2
+        sched.observe(n, t, t * 40.0)
+    # deliberately misfit models: enormous rmse (fails the trust check),
+    # with a fitted argmin at n=4 — the opposite of the measurements
+    misfit = FittedModel("quad", (0.0, -1.0, 10.0), rmse=100.0)
+    sched.time_model = sched.energy_model = misfit
+    assert sched._argmin() == 2      # old fallback returned misfit's n=4
+    assert sched.pick() == 2
+    assert sched.best() == 2
+
+
 def test_poor_fit_falls_back_to_observed_minimum():
     """A V-shaped curve over a wide n range (the pod factorisation sweep)
     fits neither convex form; the scheduler must then trust the measured

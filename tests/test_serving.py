@@ -346,6 +346,91 @@ def test_pool_reports_latency_percentiles(small_lm):
         assert 0.0 < r.latency_p50_s <= r.latency_p95_s <= r.wall_s
 
 
+@pytest.mark.parametrize("chunked", [True, False])
+def test_completion_prompt_len_is_admission_prompt_length(small_lm, chunked):
+    """Regression: _finish used to report slot.pos as prompt_len, which at
+    finish time is prompt length PLUS generated tokens. The true prompt
+    length must be recorded at admission — on both the fused-chunk and
+    per-token decode paths."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=2, max_len=64,
+                        chunked=chunked)
+    rng = np.random.default_rng(13)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, model.cfg.vocab_size, (plen,),
+                                        dtype=np.int32),
+                    max_new_tokens=3)
+            for i, plen in enumerate((4, 9, 13))]
+    eng.submit_many(reqs)
+    done = {c.rid: c for c in eng.run()}
+    for r in reqs:
+        c = done[r.rid]
+        assert len(c.tokens) == 3
+        assert c.prompt_len == len(r.prompt), \
+            "prompt_len must not include generated tokens"
+
+
+def test_zero_budget_request_completes_empty(small_lm):
+    """Regression: a request with max_new_tokens <= 0 used to emit the
+    prefill sample — one token it never asked for. It must now complete
+    empty without touching the device, while neighbours are unaffected."""
+    model, params = small_lm
+    rng = np.random.default_rng(17)
+
+    def prompt(plen):
+        return rng.integers(0, model.cfg.vocab_size, (plen,),
+                            dtype=np.int32)
+
+    reqs = [Request(rid=0, prompt=prompt(5), max_new_tokens=0),
+            Request(rid=1, prompt=prompt(7), max_new_tokens=-2),
+            Request(rid=2, prompt=prompt(6), max_new_tokens=2)]
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng.submit_many(reqs)
+    done = {c.rid: c for c in eng.run()}
+    assert sorted(done) == [0, 1, 2]
+    assert done[0].tokens == [] and done[1].tokens == []
+    assert done[0].prompt_len == 5 and done[1].prompt_len == 7
+    assert len(done[2].tokens) == 2
+    # token accounting saw only the real request's tokens
+    assert eng.tokens_generated == 2
+
+    # an all-zero-budget queue drains without any device work
+    eng2 = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng2.submit(Request(rid=9, prompt=prompt(4), max_new_tokens=0))
+    out = eng2.run()
+    assert [c.rid for c in out] == [9] and out[0].tokens == []
+    assert eng2.tokens_generated == 0 and eng2.chunks == 0
+
+
+def test_long_prompt_bucket_rounds_to_power_of_two(small_lm):
+    """Regression: _bucket returned the raw length past 2048, so every
+    distinct long prompt compiled its own prefill executable. Lengths past
+    the table must round up to the next power of two so ragged long
+    prompts share one jitted prefill."""
+    from repro.serving.engine import _bucket
+
+    for b in (16, 32, 64, 128, 256, 512, 1024, 2048):
+        assert _bucket(b) == b and _bucket(b - 1) == b
+    assert _bucket(2049) == 4096
+    assert _bucket(3000) == 4096
+    assert _bucket(4096) == 4096
+    assert _bucket(4097) == 8192
+
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    rng = np.random.default_rng(19)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, model.cfg.vocab_size, (plen,),
+                                        dtype=np.int32),
+                    max_new_tokens=2)
+            for i, plen in enumerate((2049, 2500, 3000, 4096))]
+    # one admission bucket — hence ONE prefill executable in the shared
+    # jit cache, instead of one compile per distinct long length
+    assert len({eng._admit_key(r) for r in reqs}) == 1
+    assert eng._prefill_fn(4, _bucket(2049)) is eng._prefill_fn(
+        4, _bucket(4096))
+
+
 def test_video_stream_requests_deterministic():
     s1 = VideoRequestStream(n_frames=10, seed=42)
     s2 = VideoRequestStream(n_frames=10, seed=42)

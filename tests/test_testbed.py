@@ -1,0 +1,75 @@
+"""Core carve-up + pinned-container testbed.
+
+``assign_core_sets`` is pure logic (no process spawn), so most of this is
+fast; the end-to-end pinned-process run is marked ``slow``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import testbed
+
+
+def test_assign_core_sets_disjoint_equal_cover():
+    sets = testbed.assign_core_sets(3, avail=range(8))
+    assert len(sets) == 3
+    assert all(len(s) == 2 for s in sets)          # 8 // 3 cores each
+    seen = set()
+    for s in sets:
+        assert not (seen & s), "core sets overlap"
+        seen |= s
+    assert seen <= set(range(8))
+
+
+def test_assign_core_sets_respects_total_cores():
+    assert testbed.assign_core_sets(2, total_cores=2, avail=range(8)) == \
+        [frozenset({0}), frozenset({1})]
+
+
+def test_assign_core_sets_rejects_overflow():
+    """Regression: the modulo wrap used to hand 'disjoint' containers
+    shared cores silently — corrupting both the isolation claim and
+    busy_core_seconds. Overflow must now be an explicit error."""
+    with pytest.raises(ValueError, match="disjoint"):
+        testbed.assign_core_sets(5, avail=range(4))
+    with pytest.raises(ValueError):
+        testbed.assign_core_sets(0, avail=range(4))
+
+
+def test_assign_core_sets_shared_is_explicit_round_robin():
+    sets = testbed.assign_core_sets(5, avail=range(2), allow_shared=True)
+    assert len(sets) == 5 and all(len(s) == 1 for s in sets)
+    assert set().union(*sets) == {0, 1}            # every core still used
+
+
+def test_run_split_rejects_more_containers_than_cores():
+    """The n > cores case, end-to-end: refused before any process spawns
+    (allow_shared=True is the explicit fractional-share escape hatch)."""
+    frames = testbed.make_video(4)
+    cores = len(os.sched_getaffinity(0))
+    with pytest.raises(ValueError, match="disjoint"):
+        testbed.run_split(frames, cores + 1)
+
+
+@pytest.mark.slow
+def test_run_split_pinned_processes_match_single_container():
+    """The refactored pinned-worker harness end-to-end: split outputs are
+    combined in frame order and match the 1-container run; core sets were
+    disjoint and busy accounting is sane."""
+    cores = len(os.sched_getaffinity(0))
+    if cores < 2:
+        pytest.skip("needs 2 cores")
+    frames = testbed.make_video(8)
+    base = testbed.run_split(frames, 1, batch=4)
+    split = testbed.run_split(frames, 2, batch=4)
+    assert split.disjoint
+    assert split.outputs.shape == base.outputs.shape
+    np.testing.assert_allclose(split.outputs, base.outputs, atol=1e-5)
+    assert split.busy_core_seconds > 0
+    # busy core-seconds can never exceed what the assigned cores could
+    # physically run (the allow_shared overcount regression)
+    assert split.busy_core_seconds <= 2 * split.wall_s + 1e-6
+    assert len(split.per_container_s) == 2
