@@ -15,6 +15,11 @@ Three pieces of evidence:
       at n ∈ {1, 2, 4}, emitting ``BENCH_process_pool.json``. Counts past
       the host's core budget fall back to explicit round-robin shared
       cores (flagged per row) rather than silently overlapping.
+  (d) ``--streaming``: the same wave admitted request-by-request through
+      the ``Router`` (serving/router.py) and consumed as chunk events,
+      recording **time-to-first-chunk p50/p95** and streamed tokens/s per
+      count, emitting ``BENCH_streaming.json`` — the latency axis the
+      wave API could not observe at all.
 
 The measured model is a mid-size reduction — large enough that XLA compute
 dominates Python dispatch, which is what lets threads overlap on CPU.
@@ -157,6 +162,80 @@ def run_process(quick: bool = False) -> str:
     return save("pool_scaling_process", {"measured": rows}, lines)
 
 
+def measure_streaming(model, params, requests, ns=(1, 2, 4), n_slots=2,
+                      max_len=128, reps: int = 3) -> list[dict]:
+    """Request-level streaming through the Router: per count, the wave is
+    admitted one request at a time (continuous admission, least-loaded +
+    bucket-aware dispatch) and consumed as chunk events. Records wall,
+    tokens/s and time-to-first-chunk p50/p95 — the latency axis the wave
+    API could not even observe."""
+    import numpy as np
+
+    from repro.serving import Request, Router, ThreadBackend
+
+    def clone(reqs):
+        return [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                for r in reqs]
+
+    rows = []
+    for n in ns:
+        router = Router(ThreadBackend(model, params, n,
+                                      n_slots_per_container=n_slots,
+                                      max_len=max_len))
+        # compile warmup (prefill buckets + chunk lengths)
+        for h in [router.submit(r) for r in clone(requests)]:
+            h.result()
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            handles = [router.submit(r) for r in clone(requests)]
+            router.drain()
+            wall = time.perf_counter() - t0
+            ttfc = [h.ttfc_s for h in handles if h.ttfc_s is not None]
+            toks = sum(len(h.completion.tokens) for h in handles)
+            row = {"n": n, "wall_s": wall,
+                   "tokens_per_s": toks / wall if wall > 0 else 0.0,
+                   "ttfc_p50_s": float(np.percentile(ttfc, 50)),
+                   "ttfc_p95_s": float(np.percentile(ttfc, 95))}
+            if best is None or row["wall_s"] < best["wall_s"]:
+                best = row
+        router.close()
+        rows.append(best)
+    return rows
+
+
+def run_streaming(quick: bool = False) -> str:
+    """The streaming lane: emits ``BENCH_streaming.json`` (time-to-first-
+    chunk percentiles + streamed throughput per container count)."""
+    import jax
+
+    ns = (1, 2) if quick else (1, 2, 4)
+    n_requests, max_new, reps = (6, 4, 1) if quick else (16, 8, 3)
+    if quick:
+        from repro.configs.registry import get_config as _get
+        cfg = _get("qwen3-0.6b-reduced")
+    else:
+        cfg = bench_config()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = make_requests(cfg, n_requests, max_new, plen_range=(20, 60))
+    rows = measure_streaming(model, params, requests, ns=ns, reps=reps,
+                             max_len=128)
+    lines = ["# Pool scaling — request-level streaming (Router)",
+             "", f"{n_requests} requests × {max_new} new tokens, arch "
+             f"{cfg.name}; continuous admission, chunk-event consumption; "
+             "warm engines (compile excluded)", ""]
+    lines += table(
+        ["n", "wall (s)", "tok/s", "ttfc p50 (s)", "ttfc p95 (s)"],
+        [[r["n"], r["wall_s"], r["tokens_per_s"], r["ttfc_p50_s"],
+          r["ttfc_p95_s"]] for r in rows])
+    save_bench("streaming", {
+        "config": cfg.name,
+        "per_n": {str(r["n"]): {k: v for k, v in r.items() if k != "n"}
+                  for r in rows}})
+    return save("pool_scaling_streaming", {"measured": rows}, lines)
+
+
 def run(quick: bool = False) -> str:
     import jax
 
@@ -213,8 +292,14 @@ if __name__ == "__main__":
                     help="thread: sequential-vs-concurrent lane (default); "
                          "process: thread-vs-pinned-process lane emitting "
                          "BENCH_process_pool.json")
+    ap.add_argument("--streaming", action="store_true",
+                    help="request-level streaming lane (Router): "
+                         "time-to-first-chunk p50/p95 + streamed tok/s, "
+                         "emitting BENCH_streaming.json")
     args = ap.parse_args()
-    if args.isolation == "process":
+    if args.streaming:
+        print(run_streaming(quick=args.quick))
+    elif args.isolation == "process":
         print(run_process(quick=args.quick))
     else:
         print(run(quick=args.quick))

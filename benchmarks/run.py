@@ -48,6 +48,11 @@ def main() -> int:
     print(pool_scaling.run_process(quick=args.quick))
 
     print("=" * 72)
+    print("pool_scaling (streaming) — Router time-to-first-chunk")
+    print("=" * 72)
+    print(pool_scaling.run_streaming(quick=args.quick))
+
+    print("=" * 72)
     print("decode_throughput — fused chunked decode vs per-token")
     print("=" * 72)
     print(decode_throughput.run(quick=args.quick))

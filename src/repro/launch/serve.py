@@ -1,25 +1,31 @@
-"""Serving launcher: concurrent container-pool serving of a synthetic
-request stream, with the online divide-and-save scheduler.
+"""Serving launcher: request-level streaming Router over containers,
+with the online divide-and-save scheduler.
 
-Fixed count: one concurrent pool. ``--containers 0`` (default) runs the
-adaptive loop — waves of traffic, each served at the scheduler's current
-pick within the memory-feasible counts, each observation refining the
-fitted time/energy models. ``--submesh`` makes the containers physical on
-the *device* axis: each engine is committed to a disjoint slice of the
-host's jax devices (fake a pod on CPU with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
-``--isolation process`` makes them physical on the *CPU* axis instead —
-one OS process per container pinned to a disjoint core set before jax
-initialises (the paper's ``docker run --cpus=C/n``, see
-serving/process_pool.py); ``--total-cores`` bounds the carve-up.
+The serving surface is the ``Router`` (serving/router.py): requests are
+admitted one at a time (least-loaded + bucket-aware dispatch across the
+containers), completions stream back as typed per-chunk events, and —
+when the container count is left to the scheduler — the
+``DivideAndSaveScheduler`` observes sliding windows of (time, energy,
+tokens/s, time-to-first-chunk) stats and resizes the container count
+between windows. ``--no-stream`` serves the same traffic through the
+legacy wave shim (``serve_wave`` / the pool facades) instead.
+
+Container isolation is picked exactly as before: the default is a
+``ThreadBackend`` (engines overlap in this process); ``--submesh``
+places each container on a disjoint slice of the host's jax devices
+(fake a pod on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+``--isolation process`` runs one OS process per container pinned to a
+disjoint core set before jax initialises (the paper's
+``docker run --cpus=C/n``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --containers 4 --requests 16
+        --containers 4 --requests 16 --stream
     PYTHONPATH=src python -m repro.launch.serve --waves 8 --objective time
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --containers 2 --submesh
     PYTHONPATH=src python -m repro.launch.serve --containers 2 \
-        --isolation process --total-cores 2
+        --isolation process --total-cores 2 --stream
 """
 from __future__ import annotations
 
@@ -33,8 +39,44 @@ from repro.core.containers import feasible_counts
 from repro.core.testbed import available_cores
 from repro.launch.mesh import make_container_meshes
 from repro.models.model import Model
-from repro.serving import (AdaptiveServingPool, ContainerServingPool,
-                           ProcessContainerPool, Request)
+from repro.serving import (AdaptiveServingPool, ChunkEvent,
+                           ContainerServingPool, ProcessBackend,
+                           ProcessContainerPool, Request, Router,
+                           SubmeshBackend, ThreadBackend)
+
+
+def _make_backend(args, cfg, model, params, n, units):
+    """One container backend per isolation flavour — the Router is
+    agnostic, so all the flag handling collapses here."""
+    if args.isolation == "process":
+        return ProcessBackend(cfg, n, n_slots_per_container=args.slots,
+                              total_cores=units, params_seed=0)
+    if args.submesh:
+        return SubmeshBackend(model, params, n,
+                              n_slots_per_container=args.slots,
+                              meshes=make_container_meshes(units, n),
+                              concurrent=not args.sequential)
+    return ThreadBackend(model, params, n,
+                         n_slots_per_container=args.slots,
+                         concurrent=not args.sequential)
+
+
+def _stream_requests(router: Router, requests, verbose_chunks: bool):
+    """Continuous admission: submit everything, then consume the streams,
+    printing chunk arrivals as they land."""
+    handles = [router.submit(r) for r in requests]
+    for h in handles:
+        parts = []
+        for ev in h.stream():
+            if isinstance(ev, ChunkEvent):
+                parts.append(list(ev.tokens))
+        if verbose_chunks:
+            chunks = " | ".join(" ".join(map(str, p)) for p in parts)
+            ttfc = (f"{h.ttfc_s * 1e3:6.1f}ms" if h.ttfc_s is not None
+                    else "   n/a")        # zero-budget: DoneEvent only
+            print(f"  rid {h.rid} [container {h.container_id}] "
+                  f"ttfc {ttfc}  chunks: {chunks}")
+    return handles
 
 
 def main() -> None:
@@ -46,9 +88,16 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--waves", type=int, default=6,
-                    help="traffic waves in adaptive mode")
+                    help="traffic waves (adaptive: scheduler windows)")
     ap.add_argument("--objective", default="energy",
                     choices=("energy", "time"))
+    ap.add_argument("--stream", action="store_true", default=True,
+                    help="request-level streaming via the Router "
+                         "(default)")
+    ap.add_argument("--no-stream", dest="stream", action="store_false",
+                    help="serve through the legacy wave shim instead")
+    ap.add_argument("--print-chunks", action="store_true",
+                    help="print every request's chunk arrivals")
     ap.add_argument("--sequential", action="store_true",
                     help="disable container concurrency (baseline)")
     ap.add_argument("--units", type=int, default=8,
@@ -97,45 +146,70 @@ def main() -> None:
                 for i in range(args.requests)]
 
     if args.containers:
+        n = args.containers
         meshes = None
+        if args.stream:
+            backend = _make_backend(args, cfg, model, params, n, units)
+            meshes = getattr(backend, "meshes", None)
+            with Router(backend) as router:
+                handles = _stream_requests(router, batch_of_requests(0),
+                                           args.print_chunks)
+                # a second pass through the wave shim for the aggregate
+                # accounting line (warm engines — no recompiles)
+                done, per, wall, energy = router.serve_wave(
+                    batch_of_requests(len(handles)))
+                ttfc = sorted(h.ttfc_s for h in handles
+                              if h.ttfc_s is not None)
+                if ttfc:
+                    print(f"streamed {len(handles)} requests: ttfc p50 "
+                          f"{ttfc[len(ttfc) // 2] * 1e3:.1f}ms  max "
+                          f"{ttfc[-1] * 1e3:.1f}ms")
+                _print_wave(args, n, done, per, wall, energy, meshes,
+                            router.backend)
+            return
         if args.isolation == "process":
-            pool = ProcessContainerPool(cfg, args.containers,
+            pool = ProcessContainerPool(cfg, n,
                                         n_slots_per_container=args.slots,
                                         total_cores=units, params_seed=0)
         else:
-            meshes = (make_container_meshes(units, args.containers)
+            meshes = (make_container_meshes(units, n)
                       if args.submesh else None)
-            pool = ContainerServingPool(model, params, args.containers,
+            pool = ContainerServingPool(model, params, n,
                                         n_slots_per_container=args.slots,
                                         concurrent=not args.sequential,
                                         meshes=meshes)
         done, per, wall, energy = pool.serve_timed(batch_of_requests(0))
-        toks = sum(len(c.tokens) for c in done)
-        mode = (args.isolation if args.isolation == "process" else
-                ("sequential" if args.sequential else "concurrent"))
-        print(f"n={args.containers} ({mode}): {len(done)} requests, "
-              f"{toks} tokens in {wall:.2f}s ({toks/wall:.1f} tok/s, "
-              f"~{energy:.1f}J)")
-        for r in per:
-            devs = ""
-            if meshes is not None:
-                ids = sorted(d.id for d in meshes[r.container_id].devices.flat)
-                devs = f" devices {ids}"
-            if args.isolation == "process":
-                cores = pool.reported_core_sets[r.container_id]
-                devs = f" cores {sorted(cores)}"
-            print(f"  container {r.container_id}: {r.n_requests} reqs "
-                  f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
-                  f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J "
-                  f"p50 {r.latency_p50_s:.3f}s p95 {r.latency_p95_s:.3f}s"
-                  f"{devs}")
+        _print_wave(args, n, done, per, wall, energy, meshes,
+                    getattr(pool, "backend", None))
         if args.isolation == "process":
             pool.close()
         return
 
-    # online mode: the scheduler probes container counts across waves,
-    # bounded by the memory-feasible factorisations of the host
+    # online mode: the scheduler probes container counts, bounded by the
+    # memory-feasible factorisations of the host
     feasible = feasible_counts(cfg, units) or [1]
+    if args.stream:
+        # windowed adaptation: no explicit waves — requests stream in,
+        # the scheduler observes each window and resizes between windows
+        router = Router(
+            backend_factory=lambda n: _make_backend(args, cfg, model,
+                                                    params, n, units),
+            feasible_counts=feasible, objective=args.objective,
+            epsilon=0.2, window=args.requests)
+        for wave in range(args.waves):
+            _stream_requests(router, batch_of_requests(
+                wave * args.requests), args.print_chunks)
+        for w in router.history:
+            print(f"window {w.window}: n={w.n_containers} "
+                  f"wall {w.wall_s:.2f}s {w.tokens_per_s:.1f} tok/s "
+                  f"energy {w.energy_j:.1f}J "
+                  f"ttfc p50 {w.ttfc_p50_s:.3f}s p95 {w.ttfc_p95_s:.3f}s "
+                  f"lat p50 {w.latency_p50_s:.3f}s")
+        print(f"feasible counts: {feasible}")
+        print(f"converged choice: n={router.choice}")
+        print("scheduler summary:", router.scheduler.summary())
+        router.close()
+        return
     apool = AdaptiveServingPool(model, params, feasible,
                                 objective=args.objective, epsilon=0.2,
                                 n_slots_per_container=args.slots,
@@ -155,6 +229,30 @@ def main() -> None:
     print(f"converged choice: n={apool.choice}")
     print("scheduler summary:", apool.scheduler.summary())
     apool.close()
+
+
+def _print_wave(args, n, done, per, wall, energy, meshes, backend) -> None:
+    toks = sum(len(c.tokens) for c in done)
+    mode = (args.isolation if args.isolation == "process" else
+            ("sequential" if args.sequential else "concurrent"))
+    if args.stream:
+        mode += "+stream"
+    print(f"n={n} ({mode}): {len(done)} requests, "
+          f"{toks} tokens in {wall:.2f}s ({toks/wall:.1f} tok/s, "
+          f"~{energy:.1f}J)")
+    for r in per:
+        devs = ""
+        if meshes is not None:
+            ids = sorted(d.id for d in meshes[r.container_id].devices.flat)
+            devs = f" devices {ids}"
+        if args.isolation == "process" and backend is not None:
+            cores = backend.reported_core_sets[r.container_id]
+            devs = f" cores {sorted(cores)}"
+        print(f"  container {r.container_id}: {r.n_requests} reqs "
+              f"wall {r.wall_s:.2f}s busy {r.busy_s:.2f}s "
+              f"{r.tokens_per_s:.1f} tok/s ~{r.energy_j:.1f}J "
+              f"p50 {r.latency_p50_s:.3f}s p95 {r.latency_p95_s:.3f}s"
+              f"{devs}")
 
 
 if __name__ == "__main__":

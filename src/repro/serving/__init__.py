@@ -1,12 +1,22 @@
 from repro.serving.adaptive import (AdaptiveServingPool,
                                     SyntheticContainerPool, WaveResult,
                                     synthetic_pool_factory)
+from repro.serving.backend import (ContainerBackend, ParamsShare,
+                                   ProcessBackend, SharedParams,
+                                   SubmeshBackend, ThreadBackend,
+                                   save_params, share_params)
 from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.events import ChunkEvent, DoneEvent, Event
 from repro.serving.pool import (ContainerResult, ContainerServingPool,
                                 EnergyProxy)
-from repro.serving.process_pool import ProcessContainerPool, save_params
+from repro.serving.process_pool import ProcessContainerPool
+from repro.serving.router import CompletionHandle, Router, WindowStats
 
 __all__ = ["Completion", "Request", "ServingEngine", "ContainerResult",
            "ContainerServingPool", "EnergyProxy", "AdaptiveServingPool",
            "SyntheticContainerPool", "WaveResult", "synthetic_pool_factory",
-           "ProcessContainerPool", "save_params"]
+           "ProcessContainerPool", "save_params", "share_params",
+           "ParamsShare", "SharedParams", "ContainerBackend",
+           "ThreadBackend", "ProcessBackend", "SubmeshBackend",
+           "ChunkEvent", "DoneEvent", "Event", "Router",
+           "CompletionHandle", "WindowStats"]

@@ -1,0 +1,678 @@
+"""``ContainerBackend`` — one protocol behind every container flavour.
+
+PR 1–4 grew three parallel serving hierarchies: thread-per-container
+engines (``pool.py``), pinned OS processes (``process_pool.py``) and
+sub-mesh-committed engines (the mesh-aware engine paths). This module
+refactors their execution machinery behind one request-level protocol so
+the ``Router`` (serving/router.py) and the wave-shim pools are written
+once, against:
+
+    capacity                       # number of containers
+    submit(cid, req)               # enqueue one request on a container
+    poll() -> list[Event]          # advance + drain streamed events
+    load(cid) -> int               # queued+active requests (dispatch)
+    stats(cid) -> (busy_s, tokens) # cumulative counters (energy/windows)
+    drain(concurrent) -> [...]     # wave shim: run all containers idle
+    close()                        # release engines / children
+
+``poll`` is pull-driven: callers that want progress call it, each call
+advances every container that has work by at most one engine macro-step
+and returns the events that materialised (see serving/events.py — one
+``ChunkEvent`` per request per macro-step, a ``DoneEvent`` per
+completion). ``drain`` is the wave fast-path: it runs every container to
+idle (concurrently for real backends) and returns the per-container
+``(completions, wall_s, busy_s, tokens)`` tuples that
+``pool.assemble_wave`` has consumed since PR 4 — which is what keeps the
+PR 1–4 parity suites green through the wave shim.
+
+Three implementations:
+
+* ``ThreadBackend`` — one ``ServingEngine`` per container in this
+  process (jax releases the GIL during XLA dispatch, so engines overlap
+  on the shared device); the PR 1 pool's machinery.
+* ``SubmeshBackend`` — ``ThreadBackend`` whose engines are committed to
+  pairwise-disjoint device sub-meshes (PR 3's physical placement; the
+  disjointness validation lives here now).
+* ``ProcessBackend`` — one OS process per container pinned to a disjoint
+  core set before jax initialises (PR 4's ``docker run --cpus``
+  mechanism). Children host a ``ServingEngine`` behind a streaming pipe
+  protocol: ``("submit", [Request...])`` in, ``("events", [Event...],
+  busy_s, tokens)`` out after every engine step — so chunk events cross
+  the process boundary with the same shape as thread events, and the
+  parent's ``stats`` are the child's own counters. Params reach children
+  by seeded re-init, ``.npz`` handoff (``save_params``) or — new — a
+  ``multiprocessing.shared_memory`` mapping (``share_params``) that
+  skips the copy through the filesystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.testbed import assign_core_sets, spawn_pinned
+from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.events import DoneEvent, Event
+
+_READY_POLL_S = 0.25
+_IDLE_POLL_S = 0.05
+
+
+@runtime_checkable
+class ContainerBackend(Protocol):
+    """The request-level serving protocol (see module docstring)."""
+
+    capacity: int
+
+    def submit(self, cid: int, req: Request) -> None: ...
+
+    def poll(self) -> list[Event]: ...
+
+    def load(self, cid: int) -> int: ...
+
+    def stats(self, cid: int) -> tuple[float, int]: ...
+
+    def drain(self, concurrent: bool = True
+              ) -> list[tuple[list[Completion], float, float, int]]: ...
+
+    def close(self) -> None: ...
+
+
+def validate_disjoint_meshes(meshes: Sequence[Any],
+                             n_containers: int) -> None:
+    """Per-container sub-meshes must be pairwise disjoint device slices —
+    that IS the isolation claim sub-mesh placement rests on."""
+    if len(meshes) != n_containers:
+        raise ValueError(f"{len(meshes)} meshes for "
+                         f"{n_containers} containers")
+    sets = [frozenset(m.devices.flat) for m in meshes]
+    for i, a in enumerate(sets):
+        for b in sets[i + 1:]:
+            if a & b:
+                raise ValueError(
+                    "container sub-meshes overlap: "
+                    f"{sorted(d.id for d in a & b)}")
+
+
+# ---------------------------------------------------------------------------
+# in-process backends (thread / submesh)
+# ---------------------------------------------------------------------------
+class ThreadBackend:
+    """One ServingEngine per container in this process. ``poll`` advances
+    active engines one macro-step each — in worker threads when more than
+    one container has work, so streaming overlaps the same way waves do —
+    and ``drain`` runs each engine's ``run()`` to idle (thread-per-
+    container, the PR 1 wave machinery verbatim)."""
+
+    kind = "thread"
+
+    def __init__(self, model, params, n_containers: int,
+                 n_slots_per_container: int = 4, max_len: int = 512,
+                 engine_factory: Callable[..., ServingEngine] | None = None,
+                 meshes: Sequence[Any] | None = None,
+                 concurrent: bool = True):
+        if meshes is not None:
+            validate_disjoint_meshes(meshes, n_containers)
+        self.capacity = n_containers
+        self.meshes = meshes
+        self.concurrent = concurrent
+        self._events: deque[Event] = deque()   # append is GIL-atomic
+        self._executor = None                  # lazy; poll-step overlap
+        factory = engine_factory or ServingEngine
+        self.engines: list[ServingEngine] = []
+        for cid in range(n_containers):
+            eng = factory(model, params, n_slots=n_slots_per_container,
+                          max_len=max_len,
+                          **({"mesh": meshes[cid]} if meshes is not None
+                             else {}))
+            eng.container_id = cid
+            eng.on_event = self._events.append
+            self.engines.append(eng)
+
+    # -- streaming ------------------------------------------------------
+    def submit(self, cid: int, req: Request) -> None:
+        self.engines[cid].submit(req)
+
+    def submit_many(self, cid: int, reqs: Sequence[Request]) -> None:
+        self.engines[cid].submit_many(reqs)
+
+    def poll(self) -> list[Event]:
+        active = [e for e in self.engines if e.has_work]
+        if self.concurrent and len(active) > 1:
+            if self._executor is None:
+                # persistent workers: a stream polls once per macro-step
+                # for its whole life — per-poll thread spawns would churn
+                from concurrent.futures import ThreadPoolExecutor
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self.capacity,
+                    thread_name_prefix="container-step")
+            futures = [self._executor.submit(e.step) for e in active]
+            errs = []
+            for f in futures:           # join ALL steps before raising —
+                try:                    # a swallowed error would hang the
+                    f.result()          # stream waiting for a DoneEvent
+                except BaseException as e:
+                    errs.append(e)
+            if errs:
+                raise errs[0]
+        else:
+            for eng in active:
+                eng.step()
+        for eng in self.engines:
+            # poll-driven consumers take completions from DoneEvents;
+            # nobody calls run() on a streamed engine, so drain its done
+            # list (all engines — zero-budget submissions complete at
+            # submit, without the engine ever becoming active) or a
+            # long-lived stream accumulates one Completion per request
+            # and a later wave drain() would return the stale backlog
+            eng.done.clear()
+        out: list[Event] = []
+        while self._events:
+            out.append(self._events.popleft())
+        return out
+
+    def load(self, cid: int) -> int:
+        eng = self.engines[cid]
+        return len(eng.queue) + sum(1 for s in eng.slots if s.active)
+
+    def stats(self, cid: int) -> tuple[float, int]:
+        eng = self.engines[cid]
+        return eng.busy_s, eng.tokens_generated
+
+    # -- wave shim ------------------------------------------------------
+    def drain(self, concurrent: bool | None = None
+              ) -> list[tuple[list[Completion], float, float, int]]:
+        """Run every container to idle; per-container results for
+        ``assemble_wave``. Wave consumers take completions, not events,
+        so the event buffer is cleared afterwards (``engine.run`` emitted
+        into it redundantly)."""
+        if concurrent is None:
+            concurrent = self.concurrent
+        out: list[Any] = [None] * self.capacity
+
+        def run_one(cid: int) -> None:
+            try:
+                eng = self.engines[cid]
+                t0 = time.perf_counter()
+                busy0, toks0 = eng.busy_s, eng.tokens_generated
+                comps = eng.run()
+                out[cid] = (comps, time.perf_counter() - t0,
+                            eng.busy_s - busy0,
+                            eng.tokens_generated - toks0)
+            except BaseException as e:  # propagate across the thread join
+                out[cid] = e
+
+        if concurrent and self.capacity > 1:
+            workers = [threading.Thread(target=run_one, args=(cid,),
+                                        daemon=True)
+                       for cid in range(self.capacity)]
+            for w in workers:
+                w.start()
+            for w in workers:
+                w.join()
+        else:
+            for cid in range(self.capacity):
+                run_one(cid)
+        self._events.clear()
+        for e in out:
+            if isinstance(e, BaseException):
+                raise e
+        return out
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
+        self._events.clear()
+        self.engines = []
+        self.capacity = 0
+
+
+class SubmeshBackend(ThreadBackend):
+    """ThreadBackend whose engines are committed to disjoint device
+    sub-meshes (``launch/mesh.make_container_meshes``) — the containers
+    are physical on the device axis, so the threads overlap real parallel
+    hardware instead of one shared device."""
+
+    kind = "submesh"
+
+    def __init__(self, model, params, n_containers: int,
+                 n_slots_per_container: int = 4, max_len: int = 512,
+                 engine_factory: Callable[..., ServingEngine] | None = None,
+                 meshes: Sequence[Any] | None = None,
+                 concurrent: bool = True):
+        if meshes is None:
+            raise ValueError("SubmeshBackend needs per-container meshes "
+                             "(launch/mesh.make_container_meshes)")
+        super().__init__(model, params, n_containers,
+                         n_slots_per_container=n_slots_per_container,
+                         max_len=max_len, engine_factory=engine_factory,
+                         meshes=meshes, concurrent=concurrent)
+
+
+# ---------------------------------------------------------------------------
+# params handoff for process containers
+# ---------------------------------------------------------------------------
+def save_params(params: Any, path: str) -> str:
+    """Write a params tree to ``path`` (.npz, leaves in tree order) for the
+    cross-process handoff: children rebuild the tree structure from
+    ``jax.eval_shape(model.init, ...)`` and unflatten these leaves — exact
+    float bytes, so parity with the parent's params is preserved."""
+    import jax
+    leaves = jax.tree_util.tree_leaves(params)
+    np.savez(path, **{f"leaf{i}": np.asarray(leaf)
+                      for i, leaf in enumerate(leaves)})
+    return path
+
+
+def _load_params(model, path: str):
+    import jax
+    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(struct)
+    with np.load(path) as z:
+        leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedParams:
+    """Picklable descriptor of a ``multiprocessing.shared_memory`` params
+    block: children attach by name and view each leaf at its offset —
+    one parent-side copy total, no filesystem round-trip (the ROADMAP's
+    leftover from the ``.npz`` handoff, which writes and re-reads every
+    byte per child)."""
+    shm_name: str
+    specs: tuple                  # ((shape, dtype_str, offset), ...)
+    nbytes: int
+
+
+class ParamsShare:
+    """Parent-side owner of the shared block. Keep it alive while any
+    child may attach; ``close()`` unlinks the segment. Pass ``.handle``
+    (the picklable SharedParams) to pools/backends."""
+
+    def __init__(self, shm, handle: SharedParams):
+        self._shm = shm
+        self.handle = handle
+
+    def close(self) -> None:
+        if self._shm is None:
+            return
+        shm, self._shm = self._shm, None
+        shm.close()
+        try:
+            shm.unlink()
+        except FileNotFoundError:
+            pass
+
+    def __enter__(self) -> "ParamsShare":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def share_params(params: Any) -> ParamsShare:
+    """Lay the params tree's leaves out back-to-back in one shared-memory
+    segment (leaves in tree order, byte-exact, so parity with the parent's
+    params is preserved — same contract as ``save_params``)."""
+    import jax
+    from multiprocessing import shared_memory
+    leaves = [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(params)]
+    specs, offset = [], 0
+    for leaf in leaves:
+        # leaves are aligned to their itemsize so the child-side ndarray
+        # views are valid for any dtype
+        align = max(leaf.dtype.itemsize, 1)
+        offset = (offset + align - 1) // align * align
+        specs.append((leaf.shape, leaf.dtype.str, offset))
+        offset += leaf.nbytes
+    shm = shared_memory.SharedMemory(create=True, size=max(offset, 1))
+    for leaf, (shape, dtype, off) in zip(leaves, specs):
+        dst = np.ndarray(shape, dtype=dtype, buffer=shm.buf, offset=off)
+        dst[...] = leaf
+    handle = SharedParams(shm.name, tuple(specs), offset)
+    return ParamsShare(shm, handle)
+
+
+def _load_params_shm(model, handle: SharedParams):
+    """Child-side loader: attach, view each leaf, copy onto the device
+    (``jnp.asarray``), detach. The segment outlives the view copies only
+    in the parent, which owns the unlink."""
+    import jax
+    import jax.numpy as jnp
+    from multiprocessing import shared_memory
+    # NOTE on lifetime: spawn children inherit the parent's resource
+    # tracker, so this attach registers a duplicate no-op and the parent
+    # keeps sole ownership of the unlink (ParamsShare.close).
+    shm = shared_memory.SharedMemory(name=handle.shm_name)
+    try:
+        leaves = []
+        for shape, dtype, off in handle.specs:
+            view = np.ndarray(shape, dtype=dtype, buffer=shm.buf, offset=off)
+            # jnp.array(copy=True): jax on CPU may alias a numpy buffer
+            # zero-copy, and an alias into the segment would dangle the
+            # moment it is unmapped below
+            leaves.append(jnp.array(view, copy=True))
+        for leaf in leaves:
+            leaf.block_until_ready()
+    finally:
+        shm.close()
+    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(struct)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# process backend
+# ---------------------------------------------------------------------------
+def _serving_child(conn, cid: int, cfg, params_seed: int,
+                   params_path: str | None, params_shm, n_slots: int,
+                   max_len: int, greedy: bool, seed: int, chunked: bool,
+                   chunk_tokens: int | None) -> None:
+    """Container body (module-level: spawn pickles it by reference).
+    Affinity was already applied by ``spawn_pinned``; the jax import below
+    therefore sizes XLA's threadpool from the container's cpuset.
+
+    Streaming protocol: ``("submit", [Request...])`` enqueues;
+    after every engine macro-step (and after zero-budget submissions,
+    which complete instantly) the child flushes ``("events", [Event...],
+    busy_s, tokens_generated)``. The pipe is checked between steps, so a
+    ``("close",)`` lands promptly even mid-stream."""
+    import traceback
+    try:
+        import jax
+
+        from repro.models.model import Model
+        from repro.serving.engine import ServingEngine
+
+        model = Model(cfg)
+        if params_shm is not None:
+            params = _load_params_shm(model, params_shm)
+        elif params_path:
+            params = _load_params(model, params_path)
+        else:
+            params = model.init(jax.random.PRNGKey(params_seed))
+        engine = ServingEngine(model, params, n_slots=n_slots,
+                               max_len=max_len, greedy=greedy, seed=seed,
+                               chunked=chunked, chunk_tokens=chunk_tokens)
+        # events cross the pipe as-is: the child must stamp the parent's
+        # container id or every child would claim container 0
+        engine.container_id = cid
+        buf: list = []
+        engine.on_event = buf.append
+        try:
+            cores = sorted(os.sched_getaffinity(0))
+        except AttributeError:              # non-Linux dev host
+            cores = []
+        conn.send(("ready", cores))
+    except BaseException:
+        conn.send(("error", traceback.format_exc()))
+        return
+    while True:
+        try:
+            if buf:
+                conn.send(("events", list(buf), engine.busy_s,
+                           engine.tokens_generated))
+                buf.clear()
+                # DoneEvents carry the completions; nobody calls run()
+                # here, so drain the engine's done list or it grows
+                # without bound across a long-lived stream
+                engine.done.clear()
+            timeout = 0 if engine.has_work else _IDLE_POLL_S
+            if conn.poll(timeout):
+                msg = conn.recv()
+                if msg[0] == "close":
+                    conn.close()
+                    return
+                if msg[0] == "submit":
+                    engine.submit_many(msg[1])
+                    continue               # flush instant completions
+            if engine.has_work:
+                engine.step()
+        except (EOFError, BrokenPipeError):  # parent died / closed: exit
+            return
+        except BaseException:
+            try:
+                conn.send(("error", traceback.format_exc()))
+            except (BrokenPipeError, OSError):
+                return
+
+
+class ProcessBackend:
+    """One pinned OS process per container (the paper's ``--cpus``
+    shares), behind the streaming ContainerBackend protocol. Children
+    spawn lazily at first submit and stay warm until ``close()`` —
+    engines, compiled executables and params survive across waves and
+    streams, which is what makes process isolation affordable inside an
+    online loop."""
+
+    kind = "process"
+
+    def __init__(self, cfg, n_containers: int,
+                 n_slots_per_container: int = 4, max_len: int = 512,
+                 total_cores: int | None = None,
+                 params_seed: int = 0, params_path: str | None = None,
+                 params_shm: SharedParams | None = None,
+                 greedy: bool = True, seed: int = 0,
+                 chunked: bool = True, chunk_tokens: int | None = None,
+                 allow_shared_cores: bool = False,
+                 start_timeout_s: float = 600.0):
+        self.cfg = cfg
+        self.capacity = n_containers
+        self.n_slots = n_slots_per_container
+        self.max_len = max_len
+        self.params_seed = params_seed
+        self.params_path = params_path
+        self.params_shm = params_shm
+        if params_path and params_shm:
+            raise ValueError("pass params_path or params_shm, not both")
+        self.greedy = greedy
+        self.seed = seed
+        self.chunked = chunked
+        self.chunk_tokens = chunk_tokens
+        self.start_timeout_s = start_timeout_s
+        # fail fast, before any spawn: more containers than cores cannot
+        # be disjoint (see core/testbed.assign_core_sets)
+        self.core_sets = assign_core_sets(n_containers,
+                                         total_cores=total_cores,
+                                         allow_shared=allow_shared_cores)
+        self.reported_core_sets: list[frozenset[int]] | None = None
+        self.workers: list[tuple[Any, Any]] | None = None
+        self._events: deque[Event] = deque()
+        self._stats = [(0.0, 0)] * n_containers
+        self._outstanding = [0] * n_containers
+
+    # -- lifecycle ------------------------------------------------------
+    def warm(self) -> None:
+        """Public warm-up: spawn + handshake the children now, so a wave
+        shim (or a latency-sensitive caller) can pay the spawn+compile
+        cost outside its timed region."""
+        self._ensure_workers()
+
+    def _ensure_workers(self) -> None:
+        """Spawn + handshake all children once; engines stay warm across
+        waves (the per-count pool caches rely on this)."""
+        if self.workers is not None:
+            return
+        ctx = mp.get_context("spawn")
+        workers = []
+        for cid, cores in enumerate(self.core_sets):
+            proc, conn = spawn_pinned(
+                _serving_child, cores,
+                args=(cid, self.cfg, self.params_seed, self.params_path,
+                      self.params_shm, self.n_slots, self.max_len,
+                      self.greedy, self.seed, self.chunked,
+                      self.chunk_tokens), ctx=ctx)
+            workers.append((proc, conn))
+        reported = []
+        try:
+            for cid, (proc, conn) in enumerate(workers):
+                msg = self._recv(proc, conn, self.start_timeout_s)
+                if msg[0] != "ready":
+                    raise RuntimeError(
+                        f"container {cid} failed to start:\n{msg[1]}")
+                reported.append(frozenset(msg[1]))
+        except BaseException:
+            for proc, _ in workers:
+                proc.terminate()
+            raise
+        self.workers = workers
+        self.reported_core_sets = reported
+
+    @staticmethod
+    def _recv(proc, conn, timeout_s: float | None):
+        """recv that notices a dead child instead of blocking forever."""
+        deadline = (None if timeout_s is None
+                    else time.perf_counter() + timeout_s)
+        while not conn.poll(_READY_POLL_S):
+            if not proc.is_alive():
+                raise RuntimeError(
+                    f"container process died (exit {proc.exitcode}) "
+                    "before replying")
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError("container start/serve timed out")
+        return conn.recv()
+
+    def close(self) -> None:
+        """Shut the warm children down (idempotent). Cached backends
+        evicted by adaptive facades call this so children never leak."""
+        if self.workers is None:
+            return
+        workers, self.workers = self.workers, None
+        self._events.clear()
+        self._outstanding = [0] * self.capacity
+        # respawned children restart their counters at zero — stale
+        # cumulatives would make the next wave's deltas negative
+        self._stats = [(0.0, 0)] * self.capacity
+        for _, conn in workers:
+            try:
+                conn.send(("close",))
+            except (BrokenPipeError, OSError):
+                pass
+        for proc, conn in workers:
+            proc.join(timeout=10)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5)
+            conn.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- streaming ------------------------------------------------------
+    def submit(self, cid: int, req: Request) -> None:
+        self.submit_many(cid, [req])
+
+    def submit_many(self, cid: int, reqs: Sequence[Request]) -> None:
+        if not reqs:
+            return
+        self._ensure_workers()
+        assert self.workers is not None
+        _, conn = self.workers[cid]
+        conn.send(("submit", list(reqs)))
+        self._outstanding[cid] += len(reqs)
+
+    def _pump(self, block_s: float = 0.0) -> bool:
+        """Drain every ready child message into the event buffer; with
+        ``block_s`` wait up to that long for the first one. Raises (after
+        tearing the workers down — their pipes hold replies for a wave
+        that no longer exists) on a child error or death."""
+        if self.workers is None:
+            return False
+        from multiprocessing.connection import wait as conn_wait
+        conns = [conn for _, conn in self.workers]
+        got = False
+        try:
+            ready = conn_wait(conns, block_s)
+            for conn in ready:
+                cid = conns.index(conn)
+                while conn.poll(0):
+                    msg = conn.recv()
+                    got = True
+                    if msg[0] == "error":
+                        raise RuntimeError(
+                            f"container {cid} failed mid-serve:\n{msg[1]}")
+                    _, events, busy, toks = msg
+                    self._stats[cid] = (busy, toks)
+                    for ev in events:
+                        if isinstance(ev, DoneEvent):
+                            self._outstanding[cid] -= 1
+                        self._events.append(ev)
+            if not got:
+                for cid, (proc, _) in enumerate(self.workers):
+                    if self._outstanding[cid] and not proc.is_alive():
+                        raise RuntimeError(
+                            f"container {cid} died (exit {proc.exitcode}) "
+                            f"with {self._outstanding[cid]} requests in "
+                            "flight")
+        except EOFError as e:
+            raise RuntimeError("container closed its pipe mid-serve") from e
+        except BaseException:
+            self.close()
+            raise
+        return got
+
+    def poll(self) -> list[Event]:
+        self._pump()
+        out = list(self._events)
+        self._events.clear()
+        return out
+
+    def load(self, cid: int) -> int:
+        return self._outstanding[cid]
+
+    def stats(self, cid: int) -> tuple[float, int]:
+        return self._stats[cid]
+
+    @property
+    def outstanding(self) -> int:
+        return sum(self._outstanding)
+
+    # -- wave shim ------------------------------------------------------
+    def drain(self, concurrent: bool | None = None
+              ) -> list[tuple[list[Completion], float, float, int]]:
+        """Pump until every in-flight request completed; per-container
+        results for ``assemble_wave``. ``concurrent`` is accepted for
+        protocol compatibility and ignored — processes always overlap
+        (that is the point of this backend). Wall/busy/token deltas are
+        measured from the buffered stats at call entry, so a warm backend
+        reports per-wave numbers, not lifetime cumulatives."""
+        del concurrent
+        stats0 = list(self._stats)
+        t0 = time.perf_counter()
+        comps: list[list[Completion]] = [[] for _ in range(self.capacity)]
+        last = [t0] * self.capacity
+        # route events already buffered (e.g. zero-budget completions
+        # flushed before drain was called) plus everything still to come
+        pending = list(self._events)
+        self._events.clear()
+        while True:
+            for ev in pending:
+                if isinstance(ev, DoneEvent):
+                    comps[ev.container_id].append(ev.completion)
+                    last[ev.container_id] = time.perf_counter()
+            if self.outstanding <= 0:
+                break
+            self._pump(block_s=_IDLE_POLL_S)
+            pending = list(self._events)
+            self._events.clear()
+        return [(comps[cid], last[cid] - t0,
+                 self._stats[cid][0] - stats0[cid][0],
+                 self._stats[cid][1] - stats0[cid][1])
+                for cid in range(self.capacity)]

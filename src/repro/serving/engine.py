@@ -57,9 +57,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 import weakref
 from collections import deque
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,7 @@ import numpy as np
 
 from repro.core.roofline import decode_chunk_tokens
 from repro.models.model import Model
+from repro.serving.events import ChunkEvent, DoneEvent
 
 
 @dataclasses.dataclass
@@ -120,6 +122,15 @@ def _shared_jits(model: Model) -> dict:
 
 
 class ServingEngine:
+    # streaming hook: backends set ``on_event`` to receive a ChunkEvent
+    # per request per macro-step (built from the chunk's existing host
+    # transfer — streaming adds no device syncs) and a DoneEvent per
+    # completion; ``container_id`` stamps the emitting container into
+    # every event. Class-level defaults keep every existing
+    # engine_factory signature working unchanged.
+    on_event: Callable[[Any], None] | None = None
+    container_id: int = 0
+
     def __init__(self, model: Model, params: Any, n_slots: int = 4,
                  max_len: int = 512, dtype=jnp.float32,
                  greedy: bool = True, seed: int = 0,
@@ -179,15 +190,27 @@ class ServingEngine:
         self.chunks = 0               # fused decode chunks dispatched
         self.tokens_generated = 0     # tokens emitted (prefill + decode)
         self.busy_s = 0.0             # wall time spent inside step()
+        self.budget_exhausted = False  # last run() hit max_steps with work
 
     # ------------------------------------------------------------------
+    def _emit_chunk(self, rid: int, tokens, now: float) -> None:
+        if self.on_event is not None:
+            self.on_event(ChunkEvent(rid, self.container_id,
+                                     tuple(tokens), now))
+
+    def _emit_done(self, comp: Completion, now: float) -> None:
+        if self.on_event is not None:
+            self.on_event(DoneEvent(comp.rid, self.container_id, comp, now))
+
     def submit(self, req: Request) -> None:
         if req.max_new_tokens <= 0:
             # zero-budget requests complete empty without touching the
             # device: seeding a slot would emit the prefill sample, one
             # token the request never asked for. Handled at submission so
             # the admission fast path never rescans the queue for them.
-            self.done.append(Completion(req.rid, [], len(req.prompt)))
+            comp = Completion(req.rid, [], len(req.prompt))
+            self.done.append(comp)
+            self._emit_done(comp, time.perf_counter())
             return
         self.queue.append(req)
 
@@ -309,6 +332,9 @@ class ServingEngine:
             slot.generated = [int(first[j])]
             slot.started = now
             self.tokens_generated += 1
+            # the prefill sample is the request's first streamed chunk —
+            # its arrival is the time-to-first-chunk the Router windows
+            self._emit_chunk(r.rid, (int(first[j]),), now)
             if slot.remaining <= 0:
                 self._finish(i)
 
@@ -322,8 +348,10 @@ class ServingEngine:
         s = self.slots[i]
         # prompt_len recorded at admission: s.pos here is prompt length
         # PLUS generated tokens (plus n_vision_tokens), not the prompt
-        self.done.append(Completion(s.rid, s.generated, s.prompt_len,
-                                    time.perf_counter() - s.started))
+        now = time.perf_counter()
+        comp = Completion(s.rid, s.generated, s.prompt_len, now - s.started)
+        self.done.append(comp)
+        self._emit_done(comp, now)
         self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
@@ -356,13 +384,20 @@ class ServingEngine:
             self.params, self.cache, state)
         self._key = state["key"]
         block, emitted = jax.device_get((block, emitted))
+        now = time.perf_counter()
         for i in active:
             s = self.slots[i]
             c = int(emitted[i])
-            s.generated.extend(block[i, :c].tolist())
+            new = block[i, :c].tolist()
+            s.generated.extend(new)
             s.pos += c
             s.remaining -= c
             self.tokens_generated += c
+            if new:
+                # one ChunkEvent per request per macro-step, built from
+                # the block that the single host transfer above already
+                # materialised — streaming costs no extra syncs
+                self._emit_chunk(s.rid, new, now)
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 self._finish(i)
         self.chunks += 1
@@ -380,12 +415,14 @@ class ServingEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos))
         nxt = self._pick(logits)
+        now = time.perf_counter()
         for i in active:
             s = self.slots[i]
             s.generated.append(int(nxt[i]))
             s.pos += 1
             s.remaining -= 1
             self.tokens_generated += 1
+            self._emit_chunk(s.rid, (int(nxt[i]),), now)
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 self._finish(i)
 
@@ -415,9 +452,23 @@ class ServingEngine:
         call* — every call counts, so admit-only iterations cannot spin
         past the budget) and drain the finished completions — engines are
         reused across serves by the pool, so neither the step budget nor
-        the done list may accumulate across calls."""
+        the done list may accumulate across calls.
+
+        Exhausting the budget with work still queued is flagged loudly
+        (``budget_exhausted`` plus a RuntimeWarning) instead of silently
+        returning a partial wave — callers that batch-serve would
+        otherwise drop the stragglers without any signal."""
         start = self.steps
         while self.has_work and self.steps - start < max_steps:
             self.step()
+        self.budget_exhausted = self.has_work
+        if self.budget_exhausted:
+            n_active = sum(1 for s in self.slots if s.active)
+            warnings.warn(
+                f"ServingEngine.run() exhausted max_steps={max_steps} with "
+                f"{len(self.queue)} queued and {n_active} active requests "
+                "remaining; returning partial completions "
+                "(engine.budget_exhausted is set)", RuntimeWarning,
+                stacklevel=2)
         out, self.done = self.done, []
         return out

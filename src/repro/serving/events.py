@@ -1,0 +1,50 @@
+"""Typed per-request serving events — the streaming serving surface.
+
+The wave API (serve a batch, block until the slowest container drains)
+hides everything that happens mid-wave; the paper's workload, by
+contrast, is *continuous* (video frames arriving over time), and online
+routing/scheduling needs observations at finer grain than a wave. These
+events are that grain: ``ServingEngine`` emits them from the points where
+token data is already on the host — admission (the prefill sample) and
+each fused decode chunk's single host transfer — so streaming adds **no
+new device syncs**.
+
+Per request the stream is: one or more ``ChunkEvent``s (each carrying the
+tokens that landed in that macro-step; the first one marks
+time-to-first-chunk) followed by exactly one ``DoneEvent`` carrying the
+finished ``Completion``. Events are plain picklable dataclasses so the
+process backend can ship them over a pipe unchanged.
+
+``time_s`` is a ``time.perf_counter`` stamp taken at emission, in the
+emitting process. Consumers that compare stamps across processes (the
+Router's latency windows) measure arrival-side instead, which keeps one
+clock domain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkEvent:
+    """Tokens for one request that materialised in one engine macro-step
+    (admission prefill sample, or a fused decode chunk's share)."""
+    rid: int
+    container_id: int
+    tokens: tuple
+    time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DoneEvent:
+    """Terminal event: the request's completion (a
+    ``serving.engine.Completion``), emitted exactly once, after every one
+    of its ChunkEvents."""
+    rid: int
+    container_id: int
+    completion: Any
+    time_s: float
+
+
+Event = Union[ChunkEvent, DoneEvent]

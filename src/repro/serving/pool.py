@@ -2,19 +2,20 @@
 
 Splits a batch of independent requests into n segments (core/splitter.py),
 runs one ServingEngine replica per "container", and combines completions in
-request order. The containers run **concurrently** — one worker thread per
-engine; jax releases the GIL while XLA executes, so n engines genuinely
-overlap device work (this is the "save" half of divide-and-save: same
-total work, less wall time). Pass ``meshes`` (one disjoint sub-mesh per
-container — ``launch/mesh.make_container_meshes``) and each engine commits
-its params/caches onto its own device slice, so the threads overlap *real
-parallel hardware*, not one shared device; the pool validates the slices
-are pairwise disjoint at construction. Without ``meshes`` every engine
-shares the default device (the thread-overlap baseline). For OS-level
-CPU shares — one pinned process per container, the paper's actual
-``docker run --cpus`` mechanism — use
-``serving/process_pool.ProcessContainerPool``, which shares this module's
-per-wave accounting via ``assemble_wave``.
+request order. Since the backend redesign the pool is a **wave shim over a
+ContainerBackend** (serving/backend.py): without ``meshes`` it builds a
+``ThreadBackend`` (engines overlap as worker threads on the shared device
+— jax releases the GIL while XLA executes, so n engines genuinely overlap:
+the "save" half of divide-and-save); with ``meshes`` (one disjoint
+sub-mesh per container — ``launch/mesh.make_container_meshes``) a
+``SubmeshBackend``, whose engines commit params/caches onto their own
+device slices (pairwise disjointness validated at construction). For
+OS-level CPU shares — one pinned process per container, the paper's
+actual ``docker run --cpus`` mechanism — use
+``serving/process_pool.ProcessContainerPool`` (a ``ProcessBackend`` behind
+the same shim), which shares this module's per-wave accounting via
+``assemble_wave``. For request-level streaming instead of waves, put a
+``serving/router.Router`` in front of any of those backends.
 
 Per-container accounting: each ContainerResult carries the container's wall
 time, its busy time (wall the engine spent inside ``step()``), its emitted
@@ -25,11 +26,12 @@ power decomposition (a baseline draw shared by the containers plus an
 activity draw proportional to busy time). The proxy is what the online
 scheduler optimises on hosts with no power sensor; the calibrated device
 simulators in core/energy_model.py play that role for TX2/Orin figures.
+An idle container in a wave (or a streamed window) yields well-defined
+zeros — empty completions never crash the accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from typing import Any, Callable, Sequence
 
@@ -37,6 +39,7 @@ import numpy as np
 
 from repro.core import splitter
 from repro.models.model import Model
+from repro.serving.backend import SubmeshBackend, ThreadBackend
 from repro.serving.engine import Completion, Request, ServingEngine
 
 
@@ -55,14 +58,22 @@ class EnergyProxy:
                 + self.idle_w * wave_wall_s / max(n_containers, 1))
 
 
+def percentiles(values: Sequence[float]) -> tuple[float, float]:
+    """(p50, p95) of a sample, (0, 0) when empty — the shared guard for
+    every latency-ish summary (completion latency here, time-to-first-
+    chunk in the Router's windows), so an idle container or empty window
+    yields well-defined zeros instead of an error."""
+    if not values:
+        return 0.0, 0.0
+    return (float(np.percentile(values, 50)),
+            float(np.percentile(values, 95)))
+
+
 def latency_percentiles(completions: Sequence[Completion]
                         ) -> tuple[float, float]:
-    """(p50, p95) of completion latencies, (0, 0) when empty — the
-    scheduler-facing tail-latency summary (ROADMAP: latency percentiles)."""
-    lats = [c.latency_s for c in completions]
-    if not lats:
-        return 0.0, 0.0
-    return (float(np.percentile(lats, 50)), float(np.percentile(lats, 95)))
+    """(p50, p95) of completion latencies — the scheduler-facing
+    tail-latency summary (ROADMAP: latency percentiles)."""
+    return percentiles([c.latency_s for c in completions])
 
 
 @dataclasses.dataclass
@@ -114,70 +125,45 @@ class ContainerServingPool:
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  concurrent: bool = True,
                  energy: EnergyProxy | None = None,
-                 meshes: Sequence[Any] | None = None):
+                 meshes: Sequence[Any] | None = None,
+                 backend=None):
         self.n_containers = n_containers
         self.concurrent = concurrent
         self.energy = energy or EnergyProxy()
-        if meshes is not None:
-            if len(meshes) != n_containers:
-                raise ValueError(f"{len(meshes)} meshes for "
-                                 f"{n_containers} containers")
-            sets = [frozenset(m.devices.flat) for m in meshes]
-            for i, a in enumerate(sets):
-                for b in sets[i + 1:]:
-                    if a & b:
-                        raise ValueError(
-                            "container sub-meshes overlap: "
-                            f"{sorted(d.id for d in a & b)}")
-        self.meshes = meshes
-        factory = engine_factory or ServingEngine
-        self.engines = [
-            factory(model, params, n_slots=n_slots_per_container,
-                    max_len=max_len,
-                    **({"mesh": meshes[i]} if meshes is not None else {}))
-            for i in range(n_containers)
-        ]
+        if backend is None:
+            backend_cls = SubmeshBackend if meshes is not None \
+                else ThreadBackend
+            backend = backend_cls(
+                model, params, n_containers,
+                n_slots_per_container=n_slots_per_container,
+                max_len=max_len, engine_factory=engine_factory,
+                meshes=meshes, concurrent=concurrent)
+        elif backend.capacity != n_containers:
+            raise ValueError(f"backend capacity {backend.capacity} != "
+                             f"{n_containers} containers")
+        self.backend = backend
+        self.meshes = getattr(backend, "meshes", None)
+
+    @property
+    def engines(self):
+        return self.backend.engines
 
     # ------------------------------------------------------------------
-    def _run_container(self, cid: int, seg: list[Request], out: list) -> None:
-        try:
-            engine = self.engines[cid]
-            t0 = time.perf_counter()
-            busy0, toks0 = engine.busy_s, engine.tokens_generated
-            engine.submit_many(seg)
-            comps = engine.run()
-            out[cid] = (comps, time.perf_counter() - t0,
-                        engine.busy_s - busy0,
-                        engine.tokens_generated - toks0)
-        except BaseException as e:      # propagate across the thread join
-            out[cid] = e
-
     def serve_timed(self, requests: list[Request],
                     concurrent: bool | None = None
                     ) -> tuple[list[Completion], list[ContainerResult],
                                float, float]:
-        """Serve a wave; returns (ordered completions, per-container
-        results, wave wall seconds, wave energy joules)."""
+        """Serve a wave (the wave shim: submit-all + drain); returns
+        (ordered completions, per-container results, wave wall seconds,
+        wave energy joules)."""
         if concurrent is None:
             concurrent = self.concurrent
         segments = splitter.split(requests, self.n_containers)
-        out: list = [None] * self.n_containers
         t0 = time.perf_counter()
-        if concurrent and self.n_containers > 1:
-            workers = [threading.Thread(target=self._run_container,
-                                        args=(cid, seg, out), daemon=True)
-                       for cid, seg in enumerate(segments)]
-            for w in workers:
-                w.start()
-            for w in workers:
-                w.join()
-        else:
-            for cid, seg in enumerate(segments):
-                self._run_container(cid, seg, out)
+        for cid, seg in enumerate(segments):
+            self.backend.submit_many(cid, seg)
+        out = self.backend.drain(concurrent=concurrent)
         wall = time.perf_counter() - t0
-        for e in out:
-            if isinstance(e, BaseException):
-                raise e
         ordered, results, energy = assemble_wave(out, segments, wall,
                                                  self.energy)
         return ordered, results, wall, energy
@@ -187,3 +173,7 @@ class ContainerServingPool:
               ) -> tuple[list[Completion], list[ContainerResult]]:
         ordered, results, _, _ = self.serve_timed(requests, concurrent)
         return ordered, results
+
+    def close(self) -> None:
+        """Release the backend (engines and their placed replicas)."""
+        self.backend.close()

@@ -2,32 +2,22 @@
 
 The paper's mechanism is literally ``docker run --cpus=C/n``: each
 container is an OS-level share of the device, not a thread in a shared
-runtime. ``ContainerServingPool`` overlaps engines with threads (useful as
-the shared-device baseline, and required for sub-mesh placement where one
-process owns the whole pod); ``ProcessContainerPool`` runs the paper's
-actual isolation: one **OS process per container**, pinned to a disjoint
-core set via ``os.sched_setaffinity`` *before* jax initialises, so XLA's
-threadpool is sized by — and confined to — the container's cpuset
-(``core/testbed.assign_core_sets`` + ``spawn_pinned``, the same harness
-the video-detection testbed uses, here hosting a full ``ServingEngine``
-over any registered model config).
+runtime. Since the backend redesign this module is a thin **wave shim**:
+the execution machinery (pinned children, streaming pipe protocol,
+params handoff) lives in ``serving/backend.ProcessBackend``;
+``ProcessContainerPool`` keeps the PR 4 wave API — ``serve_timed`` =
+submit-all + drain, with ``ContainerResult`` / ``EnergyProxy`` /
+percentile accounting reconstructed by ``pool.assemble_wave`` — so the
+PR 4 parity suites and benchmarks run unmodified. For request-level
+streaming over the same children, put a ``serving/router.Router`` in
+front of a ``ProcessBackend`` instead.
 
-Parent/child protocol, over one pipe per container:
-
-  * the parent serializes the wave's request segments (numpy prompts
-    pickle across the spawn boundary); children reply with completions
-    plus wall/busy/token counts, so the existing ``ContainerResult`` /
-    ``EnergyProxy`` / percentile accounting (``pool.assemble_wave``) works
-    unchanged;
-  * children build params from a **seeded config** (``model.init`` on the
-    pickled ArchConfig — bit-identical to the parent's on the same host),
-    or load them from an ``.npz`` handoff (``save_params`` below) when the
-    parent holds params that no seed reproduces (finetuned / large);
-  * children stay **warm**: engines, their compiled executables, and the
-    params survive across waves, so a pool cached per count (see
-    ``AdaptiveServingPool(isolation="process")``) pays spawn + compile
-    once, at first use — after that a converged scheduler's waves cost
-    the same as thread-pool waves.
+Params reach the children three ways (see backend.py): seeded re-init
+from the pickled config (bit-identical on the same host), an ``.npz``
+handoff (``save_params``) for non-reproducible params, or — cheapest —
+a ``multiprocessing.shared_memory`` mapping (``share_params``) that
+skips the filesystem copy entirely; children view the parent's bytes in
+place and copy them straight onto their device.
 
 Spawn cost is real (fresh interpreter + jax import + first-wave compile,
 seconds per child): prefer this pool for sustained serving under CPU
@@ -37,87 +27,16 @@ containers").
 """
 from __future__ import annotations
 
-import multiprocessing as mp
-import os
 import time
-from typing import Any, Sequence
-
-import numpy as np
 
 from repro.core import splitter
-from repro.core.testbed import assign_core_sets, spawn_pinned
+from repro.serving.backend import (ParamsShare, ProcessBackend, SharedParams,
+                                   save_params, share_params)
 from repro.serving.engine import Completion, Request
-from repro.serving.pool import ContainerResult, EnergyProxy, assemble_wave
+from repro.serving.pool import (ContainerResult, EnergyProxy, assemble_wave)
 
-_READY_POLL_S = 0.25
-
-
-def save_params(params: Any, path: str) -> str:
-    """Write a params tree to ``path`` (.npz, leaves in tree order) for the
-    cross-process handoff: children rebuild the tree structure from
-    ``jax.eval_shape(model.init, ...)`` and unflatten these leaves — exact
-    float bytes, so parity with the parent's params is preserved."""
-    import jax
-    leaves = jax.tree_util.tree_leaves(params)
-    np.savez(path, **{f"leaf{i}": np.asarray(leaf)
-                      for i, leaf in enumerate(leaves)})
-    return path
-
-
-def _load_params(model, path: str):
-    import jax
-    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    treedef = jax.tree_util.tree_structure(struct)
-    with np.load(path) as z:
-        leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
-    return jax.tree_util.tree_unflatten(treedef, leaves)
-
-
-def _serving_child(conn, cfg, params_seed: int, params_path: str | None,
-                   n_slots: int, max_len: int, greedy: bool, seed: int,
-                   chunked: bool, chunk_tokens: int | None) -> None:
-    """Container body (module-level: spawn pickles it by reference).
-    Affinity was already applied by ``spawn_pinned``; the jax import below
-    therefore sizes XLA's threadpool from the container's cpuset."""
-    import traceback
-    try:
-        import jax
-
-        from repro.models.model import Model
-        from repro.serving.engine import ServingEngine
-
-        model = Model(cfg)
-        params = (_load_params(model, params_path) if params_path
-                  else model.init(jax.random.PRNGKey(params_seed)))
-        engine = ServingEngine(model, params, n_slots=n_slots,
-                               max_len=max_len, greedy=greedy, seed=seed,
-                               chunked=chunked, chunk_tokens=chunk_tokens)
-        try:
-            cores = sorted(os.sched_getaffinity(0))
-        except AttributeError:              # non-Linux dev host
-            cores = []
-        conn.send(("ready", cores))
-    except BaseException:
-        conn.send(("error", traceback.format_exc()))
-        return
-    while True:
-        try:
-            msg = conn.recv()
-        except EOFError:                    # parent died / closed: exit
-            return
-        if msg[0] == "close":
-            conn.close()
-            return
-        try:                                # ("serve", [Request, ...])
-            t0 = time.perf_counter()
-            busy0, toks0 = engine.busy_s, engine.tokens_generated
-            engine.submit_many(msg[1])
-            comps = engine.run()
-            conn.send(("done", comps, time.perf_counter() - t0,
-                       engine.busy_s - busy0,
-                       engine.tokens_generated - toks0))
-        except BaseException:
-            conn.send(("error", traceback.format_exc()))
+__all__ = ["ProcessContainerPool", "save_params", "share_params",
+           "ParamsShare", "SharedParams"]
 
 
 class ProcessContainerPool:
@@ -126,82 +45,52 @@ class ProcessContainerPool:
 
     Children rebuild params as ``model.init(PRNGKey(params_seed))`` from
     the pickled ``cfg`` — pass ``params_path`` (written by ``save_params``)
-    instead when the serving params are not seed-reproducible. Workers
-    spawn lazily on first serve and stay warm until ``close()``.
+    or ``params_shm`` (a ``share_params`` handle; the caller owns the
+    share's lifetime) when the serving params are not seed-reproducible.
+    Workers spawn lazily on first serve and stay warm until ``close()``.
     """
 
     def __init__(self, cfg, n_containers: int,
                  n_slots_per_container: int = 4, max_len: int = 512,
                  total_cores: int | None = None,
                  params_seed: int = 0, params_path: str | None = None,
+                 params_shm: SharedParams | None = None,
                  energy: EnergyProxy | None = None,
                  greedy: bool = True, seed: int = 0,
                  chunked: bool = True, chunk_tokens: int | None = None,
                  allow_shared_cores: bool = False,
-                 start_timeout_s: float = 600.0):
+                 start_timeout_s: float = 600.0,
+                 backend: ProcessBackend | None = None):
         self.cfg = cfg
         self.n_containers = n_containers
-        self.n_slots = n_slots_per_container
-        self.max_len = max_len
         self.energy = energy or EnergyProxy()
-        self.params_seed = params_seed
-        self.params_path = params_path
-        self.greedy = greedy
-        self.seed = seed
-        self.chunked = chunked
-        self.chunk_tokens = chunk_tokens
-        self.start_timeout_s = start_timeout_s
-        # fail fast, before any spawn: more containers than cores cannot be
-        # disjoint (see core/testbed.assign_core_sets)
-        self.core_sets = assign_core_sets(n_containers,
-                                          total_cores=total_cores,
-                                          allow_shared=allow_shared_cores)
-        self.reported_core_sets: list[frozenset[int]] | None = None
-        self._workers: list[tuple[Any, Any]] | None = None
+        if backend is None:
+            backend = ProcessBackend(
+                cfg, n_containers,
+                n_slots_per_container=n_slots_per_container,
+                max_len=max_len, total_cores=total_cores,
+                params_seed=params_seed, params_path=params_path,
+                params_shm=params_shm, greedy=greedy, seed=seed,
+                chunked=chunked, chunk_tokens=chunk_tokens,
+                allow_shared_cores=allow_shared_cores,
+                start_timeout_s=start_timeout_s)
+        elif backend.capacity != n_containers:
+            raise ValueError(f"backend capacity {backend.capacity} != "
+                             f"{n_containers} containers")
+        self.backend = backend
 
-    # ------------------------------------------------------------------
-    def _ensure_workers(self) -> None:
-        """Spawn + handshake all children once; engines stay warm across
-        waves (the pool cache in AdaptiveServingPool relies on this)."""
-        if self._workers is not None:
-            return
-        ctx = mp.get_context("spawn")
-        workers = []
-        for cores in self.core_sets:
-            proc, conn = spawn_pinned(
-                _serving_child, cores,
-                args=(self.cfg, self.params_seed, self.params_path,
-                      self.n_slots, self.max_len, self.greedy, self.seed,
-                      self.chunked, self.chunk_tokens), ctx=ctx)
-            workers.append((proc, conn))
-        reported = []
-        try:
-            for cid, (proc, conn) in enumerate(workers):
-                msg = self._recv(proc, conn, self.start_timeout_s)
-                if msg[0] != "ready":
-                    raise RuntimeError(
-                        f"container {cid} failed to start:\n{msg[1]}")
-                reported.append(frozenset(msg[1]))
-        except BaseException:
-            for proc, _ in workers:
-                proc.terminate()
-            raise
-        self._workers = workers
-        self.reported_core_sets = reported
+    # -- compat views onto the backend ---------------------------------
+    @property
+    def core_sets(self):
+        return self.backend.core_sets
 
-    @staticmethod
-    def _recv(proc, conn, timeout_s: float | None):
-        """recv that notices a dead child instead of blocking forever."""
-        deadline = (None if timeout_s is None
-                    else time.perf_counter() + timeout_s)
-        while not conn.poll(_READY_POLL_S):
-            if not proc.is_alive():
-                raise RuntimeError(
-                    f"container process died (exit {proc.exitcode}) "
-                    "before replying")
-            if deadline is not None and time.perf_counter() > deadline:
-                raise TimeoutError("container start/serve timed out")
-        return conn.recv()
+    @property
+    def reported_core_sets(self):
+        return self.backend.reported_core_sets
+
+    @property
+    def _workers(self):
+        return self.backend.workers
 
     # ------------------------------------------------------------------
     def serve_timed(self, requests: list[Request],
@@ -212,27 +101,12 @@ class ProcessContainerPool:
         ``concurrent`` is accepted for API compatibility and ignored —
         processes always overlap (that is the point of this pool)."""
         del concurrent
-        self._ensure_workers()
-        assert self._workers is not None
+        self.backend.warm()     # spawn cost stays outside the wave wall
         segments = splitter.split(requests, self.n_containers)
         t0 = time.perf_counter()
-        for (proc, conn), seg in zip(self._workers, segments):
-            conn.send(("serve", seg))
-        out: list = [None] * self.n_containers
-        try:
-            for cid, (proc, conn) in enumerate(self._workers):
-                msg = self._recv(proc, conn, None)
-                if msg[0] == "error":
-                    raise RuntimeError(
-                        f"container {cid} failed mid-serve:\n{msg[1]}")
-                out[cid] = tuple(msg[1:])   # (comps, wall, busy, tokens)
-        except BaseException:
-            # a failed wave leaves sibling replies queued in their pipes;
-            # a "warm" pool in that state would pair wave K's completions
-            # with wave K+1's segments forever — tear the workers down so
-            # the next serve starts from a clean spawn
-            self.close()
-            raise
+        for cid, seg in enumerate(segments):
+            self.backend.submit_many(cid, seg)
+        out = self.backend.drain()
         wall = time.perf_counter() - t0
         ordered, results, energy = assemble_wave(out, segments, wall,
                                                  self.energy)
@@ -248,20 +122,7 @@ class ProcessContainerPool:
     def close(self) -> None:
         """Shut the warm children down (idempotent). Cached pools evicted
         by AdaptiveServingPool call this so child processes never leak."""
-        if self._workers is None:
-            return
-        workers, self._workers = self._workers, None
-        for _, conn in workers:
-            try:
-                conn.send(("close",))
-            except (BrokenPipeError, OSError):
-                pass
-        for proc, conn in workers:
-            proc.join(timeout=10)
-            if proc.is_alive():
-                proc.terminate()
-                proc.join(timeout=5)
-            conn.close()
+        self.backend.close()
 
     def __enter__(self) -> "ProcessContainerPool":
         return self

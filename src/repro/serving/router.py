@@ -1,0 +1,386 @@
+"""Request-level streaming Router — continuous admission over containers.
+
+The paper's workload is continuous (video frames arriving over time), but
+the wave API serves it in batch: hand over a complete wave, block until
+the slowest container drains. The ``Router`` replaces that surface with
+per-request admission and typed per-chunk events:
+
+    router = Router(ThreadBackend(model, params, n))
+    handle = router.submit(Request(...))          # returns immediately
+    for ev in handle.stream():                    # ChunkEvent... DoneEvent
+        ...
+
+Dispatch is **least-loaded + bucket-aware**: a request goes to the
+container with the fewest queued+active requests, ties broken toward a
+container already holding requests in the same prompt-length admission
+bucket (those prefill together in one compiled call — see the engine's
+batched bucket admission). Works identically over every
+``ContainerBackend`` (thread, process, submesh).
+
+With a scheduler attached, the Router closes the paper's online loop at
+**window** granularity instead of wave granularity: completions
+accumulate into a sliding window of observed (wall, energy, tokens/s,
+time-to-first-chunk, latency) stats; at each window boundary the
+``DivideAndSaveScheduler`` observes the window and re-picks the container
+count, and the Router swaps to the (cached, warm) backend for that count
+as soon as the stream drains — no explicit waves anywhere.
+
+The wave API survives as a thin shim: ``serve_wave`` = submit-all +
+drain, reconstructing ``ContainerResult`` accounting via the existing
+``pool.assemble_wave``, so wave callers and benchmarks keep working.
+
+All latency/ttfc stamps are taken router-side (one clock domain even for
+process backends): time-to-first-chunk is measured from ``submit()`` to
+the arrival of the request's first ``ChunkEvent`` at the router.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter, deque
+from typing import Any, Callable, Iterator, Sequence
+
+from repro.core.scheduler import DivideAndSaveScheduler
+from repro.serving.engine import Completion, Request, _bucket
+from repro.serving.events import ChunkEvent, DoneEvent, Event
+from repro.serving.pool import (ContainerResult, EnergyProxy, assemble_wave,
+                                latency_percentiles, percentiles)
+
+_IDLE_SLEEP_S = 0.002
+
+
+@dataclasses.dataclass
+class WindowStats:
+    """One scheduler observation window of streamed serving — the
+    request-level analogue of ``adaptive.WaveResult``."""
+    window: int
+    n_containers: int
+    wall_s: float
+    energy_j: float
+    n_requests: int
+    n_tokens: int = 0
+    tokens_per_s: float = 0.0
+    ttfc_p50_s: float = 0.0       # time-to-first-chunk, median
+    ttfc_p95_s: float = 0.0       # time-to-first-chunk, tail
+    latency_p50_s: float = 0.0
+    latency_p95_s: float = 0.0
+
+
+class CompletionHandle:
+    """Live view of one submitted request. ``stream()`` yields the
+    request's typed events as they arrive (pumping the router while it
+    waits); ``result()`` drains the stream and returns the Completion."""
+
+    def __init__(self, rid: int, router: "Router"):
+        self.rid = rid
+        self._router = router
+        self._pending: deque[Event] = deque()
+        self.completion: Completion | None = None
+        self.ttfc_s: float | None = None    # submit → first ChunkEvent
+        self.container_id: int | None = None  # where dispatch placed it
+        self.done_at: float | None = None   # DoneEvent arrival stamp
+
+    @property
+    def done(self) -> bool:
+        """The terminal event arrived at the router (it may still be
+        waiting in this handle's queue for ``stream()`` to consume)."""
+        return self.completion is not None
+
+    def stream(self) -> Iterator[Event]:
+        """Yield this request's ChunkEvents, then its DoneEvent, then
+        stop. Raises RuntimeError if the router is closed mid-stream
+        instead of blocking forever; a second stream() over an
+        already-consumed handle yields nothing (the completion is kept on
+        the handle)."""
+        while True:
+            while self._pending:
+                ev = self._pending.popleft()
+                yield ev
+                if isinstance(ev, DoneEvent):
+                    return
+            if self.completion is not None:
+                return                 # already fully consumed
+            if self._router._closed:
+                raise RuntimeError(
+                    f"router closed while request {self.rid} was "
+                    "mid-stream")
+            self._router._pump(block=True)
+
+    def result(self) -> Completion:
+        """Block (pumping the router) until done; the Completion."""
+        for _ in self.stream():
+            pass
+        assert self.completion is not None
+        return self.completion
+
+    def tokens(self) -> list[int]:
+        """Convenience: the completion's tokens (drains the stream)."""
+        return list(self.result().tokens)
+
+
+class Router:
+    """Continuous-admission facade over a ``ContainerBackend``.
+
+    Fixed mode: pass ``backend``. Adaptive mode: pass ``backend_factory``
+    (count -> backend) plus ``feasible_counts`` (and optionally a
+    ``scheduler``/``objective``); the Router starts at the scheduler's
+    pick and resizes between windows. Backends built by the factory are
+    cached per count and stay warm across resizes; ``close()`` releases
+    all of them.
+    """
+
+    def __init__(self, backend=None, *,
+                 backend_factory: Callable[[int], Any] | None = None,
+                 feasible_counts: Sequence[int] | None = None,
+                 scheduler: DivideAndSaveScheduler | None = None,
+                 objective: str = "energy",
+                 epsilon: float = 0.0, seed: int = 0,
+                 deadline_s: float | None = None,
+                 window: int = 16,
+                 energy: EnergyProxy | None = None):
+        if backend is None and backend_factory is None:
+            raise ValueError("need a backend or a backend_factory")
+        self.energy = energy or EnergyProxy()
+        self.window = window
+        self.scheduler = scheduler
+        self._factory = backend_factory
+        self._backends: dict[int, Any] = {}
+        if backend_factory is not None:
+            if scheduler is None:
+                if not feasible_counts:
+                    raise ValueError(
+                        "adaptive mode needs feasible_counts (or an "
+                        "explicit scheduler)")
+                self.scheduler = DivideAndSaveScheduler(
+                    list(feasible_counts), objective=objective,
+                    deadline_s=deadline_s, epsilon=epsilon, seed=seed)
+            n0 = self.scheduler.pick()
+            backend = self._backend_for(n0)
+        self.backend = backend
+        self._closed = False
+        self._handles: dict[int, CompletionHandle] = {}
+        self._rid_cid: dict[int, int] = {}
+        self._submit_t: dict[int, float] = {}
+        # per-container multiset of in-flight admission buckets (the
+        # bucket-aware half of dispatch)
+        self._cid_buckets: list[Counter] = [Counter()
+                                            for _ in range(backend.capacity)]
+        self.history: list[WindowStats] = []
+        self._target_n: int | None = None    # resize awaiting a drain
+        self._new_window()
+
+    # -- plumbing -------------------------------------------------------
+    def _backend_for(self, n: int):
+        if n not in self._backends:
+            assert self._factory is not None
+            self._backends[n] = self._factory(n)
+        return self._backends[n]
+
+    def _new_window(self) -> None:
+        self._window_t0 = time.perf_counter()
+        self._window_stats0 = [self.backend.stats(cid)
+                               for cid in range(self.backend.capacity)]
+        self._window_done: list[Completion] = []
+        self._window_ttfc: list[float] = []
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._handles)
+
+    @property
+    def n_containers(self) -> int:
+        return self.backend.capacity
+
+    # -- admission ------------------------------------------------------
+    def _dispatch(self, req: Request) -> int:
+        bucket = _bucket(len(req.prompt))
+        load = self.backend.load
+
+        def key(cid: int):
+            return (load(cid),
+                    0 if self._cid_buckets[cid][bucket] else 1,
+                    cid)
+        cid = min(range(self.backend.capacity), key=key)
+        self._cid_buckets[cid][bucket] += 1
+        return cid
+
+    def submit(self, req: Request) -> CompletionHandle:
+        """Admit one request now; returns immediately with a handle whose
+        ``stream()`` yields the request's events."""
+        if self._closed:
+            raise RuntimeError("router is closed")
+        if req.rid in self._handles:
+            raise ValueError(f"request id {req.rid} is already in flight")
+        cid = self._dispatch(req)
+        handle = CompletionHandle(req.rid, self)
+        handle.container_id = cid
+        self._handles[req.rid] = handle
+        self._rid_cid[req.rid] = cid
+        self._submit_t[req.rid] = time.perf_counter()
+        self.backend.submit(cid, req)
+        return handle
+
+    # -- event pump -----------------------------------------------------
+    def _pump(self, block: bool = False) -> list[Event]:
+        """Advance the backend and route its events to handles. With
+        ``block`` and nothing to route, naps briefly so process-backend
+        waits don't spin."""
+        events = self.backend.poll()
+        now = time.perf_counter()
+        for ev in events:
+            handle = self._handles.get(ev.rid)
+            if handle is None:          # stale event for a dropped handle
+                continue
+            handle._pending.append(ev)
+            if isinstance(ev, ChunkEvent) and handle.ttfc_s is None:
+                handle.ttfc_s = now - self._submit_t[ev.rid]
+            elif isinstance(ev, DoneEvent):
+                self._on_done(handle, ev)
+        if self.scheduler is not None:
+            self._maybe_rotate_window()
+        if block and not events:
+            time.sleep(_IDLE_SLEEP_S)
+        return events
+
+    def poll(self) -> list[Event]:
+        """Public pump: advance containers, route events, return the
+        routed batch (a tap — the events still reach their handles)."""
+        return self._pump(block=False)
+
+    def _on_done(self, handle: CompletionHandle, ev: DoneEvent) -> None:
+        comp = ev.completion
+        handle.completion = comp
+        handle.done_at = time.perf_counter()
+        rid = handle.rid
+        cid = self._rid_cid.pop(rid)
+        self._cid_buckets[cid][_bucket(comp.prompt_len)] -= 1
+        del self._handles[rid]
+        self._submit_t.pop(rid, None)
+        if self.scheduler is not None:
+            # window accumulators only exist to feed the scheduler; a
+            # fixed-capacity router must not retain one Completion per
+            # request forever (the lists are only reset at rotation)
+            self._window_done.append(comp)
+            if handle.ttfc_s is not None:
+                self._window_ttfc.append(handle.ttfc_s)
+
+    def drain(self) -> None:
+        """Pump until every in-flight request has completed (their
+        handles still hold any unconsumed events)."""
+        while self._handles:
+            self._pump(block=True)
+
+    # -- windowed adaptation -------------------------------------------
+    def _maybe_rotate_window(self) -> None:
+        """Sliding-window adaptation, split in two so continuous traffic
+        still adapts: the *stats window* closes on completion count
+        (observe + re-pick every ``window`` completions, even with
+        requests in flight), while the *backend swap* waits for the
+        stream to drain — resizing under a live request would strand its
+        slot."""
+        if len(self._window_done) >= self.window:
+            self._observe_window()
+        if self._target_n is None or self._handles:
+            return
+        if self._target_n != self.backend.capacity \
+                and self._factory is not None:
+            if self._window_done:
+                # the partial window ran entirely on the outgoing
+                # backend; record it before its stats0 go stale
+                self._observe_window(repick=False)
+            self.backend = self._backend_for(self._target_n)
+            self._cid_buckets = [Counter()
+                                 for _ in range(self.backend.capacity)]
+            self._new_window()
+        self._target_n = None
+
+    def _observe_window(self, repick: bool = True) -> None:
+        n = self.backend.capacity
+        wall = time.perf_counter() - self._window_t0
+        busy = [self.backend.stats(cid)[0] - self._window_stats0[cid][0]
+                for cid in range(n)]
+        toks = sum(self.backend.stats(cid)[1] - self._window_stats0[cid][1]
+                   for cid in range(n))
+        energy_j = sum(self.energy.container_energy(wall, b, n)
+                       for b in busy)
+        ttfc50, ttfc95 = percentiles(self._window_ttfc)
+        lat50, lat95 = latency_percentiles(self._window_done)
+        self.history.append(WindowStats(
+            len(self.history), n, wall, energy_j, len(self._window_done),
+            toks, toks / wall if wall > 0 else 0.0, ttfc50, ttfc95,
+            lat50, lat95))
+        assert self.scheduler is not None
+        self.scheduler.observe(n, wall, energy_j)
+        if repick:
+            self._target_n = self.scheduler.pick()
+        self._new_window()
+
+    @property
+    def choice(self) -> int:
+        """Exploitation-only container count (what a converged deployment
+        runs); only meaningful in adaptive mode."""
+        assert self.scheduler is not None
+        return self.scheduler.best()
+
+    # -- wave shim ------------------------------------------------------
+    def serve_wave(self, requests: list[Request]
+                   ) -> tuple[list[Completion], list[ContainerResult],
+                              float, float]:
+        """The legacy wave API on top of streaming: submit-all + drain,
+        per-container accounting reconstructed with the existing
+        ``assemble_wave``. Completions come back in submission order."""
+        # pin the backend for the whole wave: an adaptive window boundary
+        # inside drain() may swap self.backend, and this wave's stats
+        # deltas must come from the backend that served it
+        backend = self.backend
+        stats0 = [backend.stats(cid) for cid in range(backend.capacity)]
+        t0 = time.perf_counter()
+        handles = [self.submit(r) for r in requests]
+        self.drain()
+        wall = time.perf_counter() - t0
+        capacity = backend.capacity
+        segments: list[list[Request]] = [[] for _ in range(capacity)]
+        comps: list[list[Completion]] = [[] for _ in range(capacity)]
+        # _rid_cid entries are popped on completion; reconstruct the
+        # dispatch segments from the handles' completions instead
+        by_rid = {h.rid: h.completion for h in handles}
+        # per-container wall: submit → last DoneEvent arrival for that
+        # container (matching the pool contract, where a fast container
+        # reports its own wall, not the slowest sibling's)
+        last = [0.0] * capacity
+        for r, h in zip(requests, handles):
+            cid = h.container_id
+            segments[cid].append(r)
+            comps[cid].append(by_rid[r.rid])
+            if h.done_at is not None:
+                last[cid] = max(last[cid], h.done_at - t0)
+        out = [(comps[cid], last[cid],
+                backend.stats(cid)[0] - stats0[cid][0],
+                backend.stats(cid)[1] - stats0[cid][1])
+               for cid in range(capacity)]
+        _, results, energy = assemble_wave(out, segments, wall, self.energy)
+        ordered = [by_rid[r.rid] for r in requests]
+        return ordered, results, wall, energy
+
+    def serve(self, requests: list[Request]
+              ) -> tuple[list[Completion], list[ContainerResult]]:
+        ordered, results, _, _ = self.serve_wave(requests)
+        return ordered, results
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        """Close the backend (and every cached adaptive backend). Handles
+        still mid-stream raise rather than hang."""
+        if self._closed:
+            return
+        self._closed = True
+        backends = set(self._backends.values()) | {self.backend}
+        for b in backends:
+            b.close()
+        self._backends = {}
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -19,7 +19,7 @@ import pytest
 from repro.configs.registry import get_config
 from repro.models.model import Model
 from repro.serving import (AdaptiveServingPool, ProcessContainerPool,
-                           Request, ServingEngine)
+                           Request, ServingEngine, share_params)
 from repro.serving.process_pool import save_params
 
 HOST_CORES = len(os.sched_getaffinity(0))
@@ -133,6 +133,67 @@ def test_adaptive_pool_process_isolation_converges_warm(small_lm):
         apool.close()
     assert all(not p.is_alive() for p in procs)
     assert apool._pools == {}
+
+
+def test_shared_memory_params_roundtrip_in_process(small_lm):
+    """``share_params`` lays the leaves out in one shared-memory segment
+    and the child-side loader rebuilds a byte-identical tree — verified
+    in-process (no spawn cost), including the dangling-alias hazard: the
+    rebuilt leaves must survive the segment being closed and unlinked."""
+    from repro.serving.backend import _load_params_shm
+
+    model, params = small_lm
+    with share_params(params) as share:
+        rebuilt = _load_params_shm(model, share.handle)
+    # the share is now closed AND unlinked; the copies must be intact
+    want = jax.tree_util.tree_leaves(params)
+    got = jax.tree_util.tree_leaves(rebuilt)
+    assert len(want) == len(got)
+    for a, b in zip(want, got):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shared_params_handle_is_picklable(small_lm):
+    import pickle
+    _, params = small_lm
+    with share_params(params) as share:
+        handle = pickle.loads(pickle.dumps(share.handle))
+        assert handle == share.handle
+
+
+def test_params_path_and_shm_are_mutually_exclusive(small_lm):
+    model, _ = small_lm
+    with pytest.raises(ValueError, match="not both"):
+        ProcessContainerPool(model.cfg, 1, params_path="x.npz",
+                             params_shm=object())
+
+
+@pytest.mark.slow
+def test_shared_memory_handoff_parity_with_npz(small_lm, tmp_path):
+    """The shared-memory params handoff must serve bit-identical
+    completions to the ``.npz`` handoff (both carry the parent's exact
+    float bytes) — the ROADMAP's cross-process shared-memory leftover."""
+    model, params = small_lm
+    cfg = model.cfg
+    reqs = _requests(cfg, 4)
+
+    handoff = save_params(params, str(tmp_path / "params.npz"))
+    with ProcessContainerPool(cfg, 1, n_slots_per_container=2,
+                              max_len=64, params_path=handoff) as pool:
+        via_npz, _, _, _ = pool.serve_timed(list(reqs))
+
+    with share_params(params) as share:
+        with ProcessContainerPool(cfg, 1, n_slots_per_container=2,
+                                  max_len=64,
+                                  params_shm=share.handle) as pool:
+            via_shm, _, _, _ = pool.serve_timed(list(reqs))
+            # warm second wave over the mapped params
+            again, _, _, _ = pool.serve_timed(list(reqs))
+    key = lambda comps: {c.rid: (tuple(c.tokens), c.prompt_len)  # noqa: E731
+                         for c in comps}
+    assert key(via_shm) == key(via_npz)
+    assert key(again) == key(via_npz)
 
 
 def test_process_isolation_rejects_counts_past_core_budget():

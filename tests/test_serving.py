@@ -198,10 +198,33 @@ def test_run_budget_counts_admit_only_steps(small_lm):
     model, params = small_lm
     eng = ServingEngine(model, params, n_slots=1, max_len=64)
     eng.submit_many(_requests(model.cfg, 5, max_new=1))
-    done = eng.run(max_steps=3)
+    with pytest.warns(RuntimeWarning, match="exhausted max_steps"):
+        done = eng.run(max_steps=3)
     assert len(done) == 3              # one admit-only step per request
     assert eng.has_work                # budget stopped the loop, not idle
     assert len(eng.run()) == 2         # fresh budget drains the rest
+
+
+def test_run_budget_exhaustion_warns_and_flags(small_lm):
+    """Regression: ``run(max_steps)`` used to return a partial result
+    silently when the step budget ran out with work still queued. It must
+    warn and set ``budget_exhausted`` — and clear the flag again on a run
+    that drains cleanly."""
+    model, params = small_lm
+    eng = ServingEngine(model, params, n_slots=1, max_len=64,
+                        chunk_tokens=1)
+    assert eng.budget_exhausted is False
+    eng.submit_many(_requests(model.cfg, 3, max_new=4))
+    with pytest.warns(RuntimeWarning, match="partial completions"):
+        partial = eng.run(max_steps=2)
+    assert eng.budget_exhausted
+    assert len(partial) < 3
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")    # a clean drain must NOT warn
+        rest = eng.run()
+    assert not eng.budget_exhausted
+    assert len(partial) + len(rest) == 3
 
 
 def test_completion_latency_uses_monotonic_clock(small_lm, monkeypatch):
@@ -332,6 +355,42 @@ def test_latency_percentiles_pure():
     assert p95 == pytest.approx(float(np.percentile(lats, 95)))
     assert p50 <= p95
     assert latency_percentiles([]) == (0.0, 0.0)
+
+
+def test_assemble_wave_empty_completions_yield_zeros():
+    """Regression guard: an idle container (empty segment, zero wall — as
+    happens in a streamed window) must produce a well-defined all-zeros
+    ContainerResult, never a crash in the percentile/throughput math."""
+    from repro.serving.pool import EnergyProxy, assemble_wave
+
+    reqs = _requests(get_config("qwen3-0.6b-reduced"), 2)
+    out = [([Completion(r.rid, [1, 2], len(r.prompt), 0.01)
+             for r in reqs], 0.5, 0.4, 4),
+           ([], 0.0, 0.0, 0)]                    # idle container
+    ordered, results, energy = assemble_wave(
+        out, [reqs, []], 0.5, EnergyProxy())
+    assert [c.rid for c in ordered] == [0, 1]
+    idle = results[1]
+    assert idle.n_requests == 0 and idle.completions == []
+    assert idle.tokens_per_s == 0.0
+    assert idle.latency_p50_s == idle.latency_p95_s == 0.0
+    assert energy > 0                            # busy container's share
+
+
+def test_pool_with_more_containers_than_requests(small_lm):
+    """n_containers > len(requests): the surplus containers idle through
+    the wave with zeroed accounting and the served requests still come
+    back in order."""
+    model, params = small_lm
+    pool = ContainerServingPool(model, params, n_containers=4,
+                                n_slots_per_container=2, max_len=64)
+    reqs = _requests(model.cfg, 2, max_new=2)
+    ordered, per = pool.serve(reqs)
+    assert [c.rid for c in ordered] == [0, 1]
+    assert [r.n_requests for r in per] == [1, 1, 0, 0]
+    for r in per[2:]:
+        assert r.completions == [] and r.n_tokens == 0
+        assert r.latency_p50_s == r.latency_p95_s == 0.0
 
 
 def test_pool_reports_latency_percentiles(small_lm):

@@ -1,0 +1,521 @@
+"""Request-level streaming serving: Router + ContainerBackend protocol.
+
+The acceptance harness for the streaming redesign: concatenating a
+handle's streamed ``ChunkEvent`` tokens must bit-match the blocking
+``run()`` output for greedy decode — across model families and across
+all three backends (thread, process, submesh) — plus event-ordering,
+dispatch, windowed-adaptation and close-mid-stream behaviour. The
+process-backend cases pay spawn+compile and are marked ``slow`` (the
+streaming CI lane runs this module in full).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import (ChunkEvent, ContainerBackend, DoneEvent,
+                           ProcessBackend, Request, Router, ServingEngine,
+                           SubmeshBackend, ThreadBackend)
+
+# one representative per model-family decode path (whisper needs audio
+# extras, so the encoder-decoder family is covered by test_decode_chunk)
+STREAM_ARCHS = [
+    "qwen3-0.6b",        # dense
+    "gemma3-27b",        # sliding-window attention (unpadded admission)
+    "mamba2-2.7b",       # ssm (unpadded admission, recurrent cache)
+]
+
+
+def _requests(cfg, plens_max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                        dtype=np.int32),
+                    max_new_tokens=mn)
+            for i, (plen, mn) in enumerate(plens_max_new)]
+
+
+def _clone(reqs):
+    return [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+            for r in reqs]
+
+
+def _blocking_tokens(model, params, reqs):
+    eng = ServingEngine(model, params, n_slots=2, max_len=64)
+    eng.submit_many(_clone(reqs))
+    return {c.rid: list(c.tokens) for c in eng.run()}
+
+
+def _streamed_tokens(router, reqs):
+    """Submit everything, then consume each handle's stream; returns
+    (concat tokens per rid, completion tokens per rid, events per rid)."""
+    handles = [router.submit(r) for r in _clone(reqs)]
+    concat, comp, events = {}, {}, {}
+    for h in handles:
+        evs = list(h.stream())
+        events[h.rid] = evs
+        concat[h.rid] = [t for ev in evs[:-1] for t in ev.tokens]
+        comp[h.rid] = list(evs[-1].completion.tokens)
+    return concat, comp, events
+
+
+# ---------------------------------------------------------------------------
+# stream == blocking run(), per family, thread backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", STREAM_ARCHS)
+def test_stream_concat_bitmatches_blocking_run(arch, reduced_models):
+    model, params = reduced_models[arch]
+    reqs = _requests(model.cfg, [(6, 3), (9, 4), (5, 2), (7, 3), (6, 1)],
+                     seed=1)
+    want = _blocking_tokens(model, params, reqs)
+
+    with Router(ThreadBackend(model, params, 2, n_slots_per_container=2,
+                              max_len=64)) as router:
+        concat, comp, events = _streamed_tokens(router, reqs)
+    assert concat == want, f"{arch}: streamed chunks diverge from run()"
+    assert comp == want, f"{arch}: DoneEvent completion diverges"
+    for rid, evs in events.items():
+        # ordering: every chunk strictly before the one terminal event
+        assert all(isinstance(e, ChunkEvent) for e in evs[:-1])
+        assert isinstance(evs[-1], DoneEvent)
+        assert all(e.rid == rid for e in evs)
+        stamps = [e.time_s for e in evs]
+        assert stamps == sorted(stamps)
+
+
+def test_stream_interleaved_submission_matches_batch(reduced_models):
+    """Continuous admission: submitting while earlier requests are
+    mid-decode must not change any request's tokens."""
+    model, params = reduced_models["qwen3-0.6b"]
+    reqs = _requests(model.cfg, [(6, 4), (8, 3), (5, 4), (7, 2)], seed=3)
+    want = _blocking_tokens(model, params, reqs)
+
+    with Router(ThreadBackend(model, params, 2, n_slots_per_container=2,
+                              max_len=64)) as router:
+        h0 = router.submit(_clone(reqs)[0])
+        router.poll()                       # first request starts decoding
+        rest = [router.submit(r) for r in _clone(reqs)[1:]]
+        got = {h.rid: h.tokens() for h in [h0, *rest]}
+    assert got == want
+
+
+def test_time_to_first_chunk_recorded(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+    reqs = _requests(model.cfg, [(6, 3), (7, 2)], seed=5)
+    with Router(ThreadBackend(model, params, 1, n_slots_per_container=2,
+                              max_len=64)) as router:
+        handles = [router.submit(r) for r in _clone(reqs)]
+        router.drain()
+        for h in handles:
+            assert h.done
+            assert h.ttfc_s is not None and 0 < h.ttfc_s < 600.0
+
+
+def test_zero_budget_request_streams_done_only(reduced_models):
+    """A max_new_tokens<=0 request completes empty: its stream is exactly
+    one DoneEvent, no chunks, and neighbours are unaffected."""
+    model, params = reduced_models["qwen3-0.6b"]
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, model.cfg.vocab_size, (5,), dtype=np.int32)
+    with Router(ThreadBackend(model, params, 1, n_slots_per_container=2,
+                              max_len=64)) as router:
+        h = router.submit(Request(rid=0, prompt=prompt, max_new_tokens=0))
+        evs = list(h.stream())
+    assert len(evs) == 1 and isinstance(evs[0], DoneEvent)
+    assert evs[0].completion.tokens == []
+    assert h.ttfc_s is None
+
+
+# ---------------------------------------------------------------------------
+# wave shim
+# ---------------------------------------------------------------------------
+def test_router_wave_shim_matches_pool_contract(reduced_models):
+    """serve_wave = submit-all + drain: same completions as the blocking
+    engine, submission order preserved, per-container accounting present
+    (assemble_wave reconstruction)."""
+    model, params = reduced_models["qwen3-0.6b"]
+    reqs = _requests(model.cfg, [(6, 3)] * 6, seed=9)
+    want = _blocking_tokens(model, params, reqs)
+    with Router(ThreadBackend(model, params, 2, n_slots_per_container=2,
+                              max_len=64)) as router:
+        ordered, per, wall, energy = router.serve_wave(_clone(reqs))
+    assert [c.rid for c in ordered] == [r.rid for r in reqs]
+    assert {c.rid: list(c.tokens) for c in ordered} == want
+    assert wall > 0 and energy > 0
+    assert len(per) == 2
+    assert sum(r.n_requests for r in per) == len(reqs)
+    for r in per:
+        assert r.busy_s > 0 and r.energy_j > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+class ScriptedBackend:
+    """Minimal in-memory ContainerBackend: each request completes with
+    one chunk after ``delay_polls`` polls — deterministic substrate for
+    dispatch and windowing tests (the streaming analogue of
+    SyntheticContainerPool)."""
+
+    def __init__(self, capacity: int, delay_polls: int = 1):
+        self.capacity = capacity
+        self.delay = delay_polls
+        self._inflight: list[list] = [[] for _ in range(capacity)]
+        self._stats = [(0.0, 0)] * capacity
+        self.closed = False
+
+    def submit(self, cid, req):
+        self._inflight[cid].append([req, self.delay])
+
+    def submit_many(self, cid, reqs):
+        for r in reqs:
+            self.submit(cid, r)
+
+    def poll(self):
+        out = []
+        now = time.perf_counter()
+        for cid, flight in enumerate(self._inflight):
+            keep = []
+            for entry in flight:
+                req, left = entry
+                if left > 1:
+                    entry[1] = left - 1
+                    keep.append(entry)
+                    continue
+                toks = tuple(range(req.max_new_tokens))
+                busy, ntok = self._stats[cid]
+                self._stats[cid] = (busy + 1e-4, ntok + len(toks))
+                out.append(ChunkEvent(req.rid, cid, toks, now))
+                from repro.serving.engine import Completion
+                out.append(DoneEvent(req.rid, cid,
+                                     Completion(req.rid, list(toks),
+                                                len(req.prompt), 1e-4),
+                                     now))
+            self._inflight[cid] = keep
+        return out
+
+    def load(self, cid):
+        return len(self._inflight[cid])
+
+    def stats(self, cid):
+        return self._stats[cid]
+
+    def drain(self, concurrent=True):
+        raise NotImplementedError
+
+    def close(self):
+        self.closed = True
+
+
+def _req(rid, plen=6, max_new=2):
+    return Request(rid=rid, prompt=np.zeros((plen,), np.int32),
+                   max_new_tokens=max_new)
+
+
+def test_scripted_backend_satisfies_protocol():
+    # the protocol is structural: any object with the right methods is a
+    # ContainerBackend — including test substrates like ScriptedBackend
+    assert isinstance(ScriptedBackend(2), ContainerBackend)
+
+
+def test_dispatch_least_loaded_then_bucket_aware():
+    """Dispatch fills the least-loaded container first; among equal loads
+    it prefers the container already holding the request's prompt-length
+    bucket (those prefill together as one batch)."""
+    backend = ScriptedBackend(2, delay_polls=1000)   # nothing completes
+    router = Router(backend)
+    a1 = router.submit(_req(0, plen=6))     # bucket 16 → cid 0 (all empty)
+    b1 = router.submit(_req(1, plen=30))    # bucket 32 → cid 1 (least)
+    a2 = router.submit(_req(2, plen=7))     # loads tie → bucket 16 → cid 0
+    b2 = router.submit(_req(3, plen=20))    # loads 2/1 → cid 1 anyway
+    b3 = router.submit(_req(4, plen=25))    # loads tie → bucket 32 → cid 1
+    assert [h.container_id for h in (a1, b1, a2, b2, b3)] == [0, 1, 0, 1, 1]
+    router.close()                          # drop without draining
+
+
+def test_duplicate_rid_rejected():
+    router = Router(ScriptedBackend(1, delay_polls=1000))
+    router.submit(_req(0))
+    with pytest.raises(ValueError, match="already in flight"):
+        router.submit(_req(0))
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# windowed adaptation
+# ---------------------------------------------------------------------------
+def test_windowed_scheduler_resizes_between_windows():
+    """With a backend_factory the Router closes the online loop at window
+    granularity: every `window` completions it records WindowStats,
+    feeds the scheduler, and swaps to the picked count's (cached, warm)
+    backend before admitting the next window."""
+    built = []
+
+    def factory(n):
+        built.append(n)
+        return ScriptedBackend(n)
+
+    router = Router(backend_factory=factory, feasible_counts=[1, 2, 4],
+                    window=4, epsilon=0.0)
+    rid = 0
+    for _ in range(5):                       # 5 windows of 4 requests
+        handles = []
+        for _ in range(4):
+            handles.append(router.submit(_req(rid, max_new=3)))
+            rid += 1
+        router.drain()
+    assert len(router.history) == 5
+    for w in router.history:
+        assert w.n_requests == 4 and w.n_tokens == 12
+        assert w.n_containers in (1, 2, 4)
+        assert w.wall_s > 0 and w.energy_j > 0
+        assert w.tokens_per_s > 0
+    # the scheduler saw one observation per window
+    assert router.scheduler.n_observations == 5
+    # bootstrap explores distinct counts, and each count's backend was
+    # built exactly once (cached + reused across windows)
+    assert len(built) == len(set(built))
+    assert len(set(w.n_containers for w in router.history)) >= 3
+    assert router.backend.capacity in (1, 2, 4)
+    backends = list(router._backends.values())
+    router.close()
+    assert backends and all(b.closed for b in backends)
+
+
+def test_resize_deferred_while_requests_in_flight():
+    """A window boundary must not strand a mid-stream request: the swap
+    waits until the stream drains."""
+    built = []
+
+    def factory(n):
+        built.append(n)
+        return ScriptedBackend(n, delay_polls=3)
+
+    router = Router(backend_factory=factory, feasible_counts=[1, 2],
+                    window=2, epsilon=0.0)
+    before = router.backend
+    h1, h2 = router.submit(_req(0)), router.submit(_req(1))
+    h3 = router.submit(_req(2))              # still in flight at boundary
+    # pump: h1..h3 complete on the same poll (same delay), so the window
+    # rotates only once nothing is in flight
+    router.drain()
+    assert h1.done and h2.done and h3.done
+    assert len(router.history) == 1          # one window, 3 completions
+    assert router.history[0].n_requests == 3
+    assert router.backend is not before or len(built) == 1
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# close-mid-stream
+# ---------------------------------------------------------------------------
+def test_close_mid_stream_raises_instead_of_hanging(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+
+    def tiny_chunks(model, params, **kw):
+        # one decode token per macro-step, so the request is guaranteed
+        # to still be mid-stream when the router closes
+        return ServingEngine(model, params, chunk_tokens=1, **kw)
+
+    router = Router(ThreadBackend(model, params, 1,
+                                  n_slots_per_container=2, max_len=64,
+                                  engine_factory=tiny_chunks))
+    h = router.submit(Request(rid=0,
+                              prompt=np.arange(6, dtype=np.int32),
+                              max_new_tokens=50))
+    stream = h.stream()
+    first = next(stream)                     # at least one chunk arrived
+    assert isinstance(first, ChunkEvent)
+    router.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        for _ in stream:
+            pass
+    with pytest.raises(RuntimeError, match="closed"):
+        router.submit(_req(1))
+
+
+def test_consumed_handle_does_not_hang(reduced_models):
+    """Regression: result()/tokens()/a second stream() on a handle whose
+    stream was already consumed must return immediately (the completion
+    is kept on the handle), not pump an idle backend forever."""
+    model, params = reduced_models["qwen3-0.6b"]
+    with Router(ThreadBackend(model, params, 1, n_slots_per_container=2,
+                              max_len=64)) as router:
+        h = router.submit(Request(rid=0,
+                                  prompt=np.arange(6, dtype=np.int32),
+                                  max_new_tokens=3))
+        evs = list(h.stream())
+        assert isinstance(evs[-1], DoneEvent)
+        assert list(h.stream()) == []        # consumed: yields nothing
+        assert h.result() is h.completion    # and result() returns now
+        assert h.tokens() == list(h.completion.tokens)
+
+
+def test_streamed_completions_do_not_accumulate(reduced_models):
+    """Regression: poll-driven serving must drain each engine's done
+    list (DoneEvents carry the completions) — a long-lived stream would
+    otherwise grow one Completion per request forever, and a later wave
+    drain() would return the stale backlog into its accounting."""
+    model, params = reduced_models["qwen3-0.6b"]
+    backend = ThreadBackend(model, params, 2, n_slots_per_container=2,
+                            max_len=64)
+    with Router(backend) as router:
+        for base in (0, 10):
+            handles = [router.submit(Request(
+                rid=base + i, prompt=np.arange(6, dtype=np.int32) + i,
+                max_new_tokens=2)) for i in range(4)]
+            router.drain()
+            assert all(h.done for h in handles)
+        assert all(eng.done == [] for eng in backend.engines)
+        # and the fixed-mode router itself retains nothing per request
+        # (window accumulators exist only to feed a scheduler)
+        assert router._window_done == [] and router._window_ttfc == []
+        assert router._handles == {} and router._submit_t == {}
+        # a wave through the shim right after streaming sees ONLY its own
+        # completions, not the streamed backlog
+        reqs = _requests(model.cfg, [(6, 2)] * 4, seed=17)
+        out = backend.drain()
+        assert all(comps == [] for comps, *_ in out)  # nothing stale
+        for cid in range(2):
+            backend.submit_many(cid, [reqs[2 * cid], reqs[2 * cid + 1]])
+        out = backend.drain()
+        assert sorted(c.rid for comps, *_ in out for c in comps) == \
+            [r.rid for r in reqs]
+
+
+def test_wave_shim_per_container_wall_is_container_local(reduced_models):
+    """Regression: serve_wave must report each container's own wall
+    (submit → its last completion), not the slowest sibling's — a wave
+    where one container serves everything must not deflate the idle
+    container's throughput accounting."""
+    model, params = reduced_models["qwen3-0.6b"]
+    with Router(ThreadBackend(model, params, 2, n_slots_per_container=2,
+                              max_len=64)) as router:
+        # 2 slots per container: two same-bucket requests land on cid 0
+        # and cid 1 stays idle (least-loaded alternates, so use 2 reqs
+        # and check walls individually)
+        ordered, per, wall, _ = router.serve_wave(
+            _requests(model.cfg, [(6, 3), (6, 3)], seed=19))
+    assert len(ordered) == 2
+    for r in per:
+        assert r.wall_s <= wall + 1e-6
+        if r.n_requests == 0:
+            assert r.wall_s == 0.0 and r.tokens_per_s == 0.0
+
+
+def test_stream_engine_error_propagates(reduced_models):
+    """An engine failure mid-stream must surface as the original
+    exception at the consumer's next pump — never a silent hang."""
+    model, params = reduced_models["qwen3-0.6b"]
+
+    class Boom(ServingEngine):
+        def step(self):
+            raise RuntimeError("boom mid-stream")
+
+    router = Router(ThreadBackend(model, params, 2,
+                                  n_slots_per_container=2, max_len=64,
+                                  engine_factory=Boom))
+    h = router.submit(_req(0))
+    with pytest.raises(RuntimeError, match="boom mid-stream"):
+        for _ in h.stream():
+            pass
+
+
+# ---------------------------------------------------------------------------
+# process backend (spawn cost: slow; the streaming CI lane runs these)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_process_backend_stream_bitmatches_blocking(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+    cfg = model.cfg
+    reqs = _requests(cfg, [(6, 3), (9, 4), (5, 2), (7, 3)], seed=11)
+    want = _blocking_tokens(model, params, reqs)
+    with Router(ProcessBackend(cfg, 2, n_slots_per_container=2,
+                               max_len=64, params_seed=0)) as router:
+        concat, comp, events = _streamed_tokens(router, reqs)
+        assert concat == want
+        assert comp == want
+        for evs in events.values():
+            assert isinstance(evs[-1], DoneEvent)
+            assert all(isinstance(e, ChunkEvent) for e in evs[:-1])
+        # warm children: a second streamed round bit-matches too
+        reqs2 = [Request(r.rid + 100, r.prompt.copy(), r.max_new_tokens)
+                 for r in reqs]
+        handles = [router.submit(r) for r in reqs2]
+        got2 = {h.rid - 100: h.tokens() for h in handles}
+        assert got2 == want
+
+
+@pytest.mark.slow
+def test_process_backend_close_mid_stream(reduced_models):
+    """Closing the router while a process container is mid-stream shuts
+    the children down promptly (the child checks its pipe between steps)
+    and the abandoned stream raises instead of hanging."""
+    model, _ = reduced_models["qwen3-0.6b"]
+    router = Router(ProcessBackend(model.cfg, 1, n_slots_per_container=2,
+                                   max_len=64, params_seed=0,
+                                   chunk_tokens=1))
+    h = router.submit(Request(rid=0,
+                              prompt=np.arange(6, dtype=np.int32),
+                              max_new_tokens=40))
+    stream = h.stream()
+    assert isinstance(next(stream), ChunkEvent)
+    procs = [proc for proc, _ in router.backend.workers]
+    router.close()
+    for proc in procs:
+        proc.join(timeout=15)
+        assert not proc.is_alive()
+    with pytest.raises(RuntimeError, match="closed"):
+        for _ in stream:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# submesh backend (needs a multi-device pod; the CI multidevice lane)
+# ---------------------------------------------------------------------------
+needs_pod = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs >=8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+@needs_pod
+def test_submesh_backend_stream_bitmatches_blocking(reduced_models):
+    from repro.launch.mesh import make_container_meshes
+    model, params = reduced_models["qwen3-0.6b"]
+    reqs = _requests(model.cfg, [(6, 3), (9, 4), (5, 2), (7, 3), (6, 2)],
+                     seed=13)
+    want = _blocking_tokens(model, params, reqs)
+    backend = SubmeshBackend(model, params, 2, n_slots_per_container=2,
+                             max_len=64,
+                             meshes=make_container_meshes(8, 2))
+    with Router(backend) as router:
+        concat, comp, _ = _streamed_tokens(router, reqs)
+    assert concat == want
+    assert comp == want
+
+
+@needs_pod
+def test_submesh_backend_requires_meshes(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+    with pytest.raises(ValueError, match="meshes"):
+        SubmeshBackend(model, params, 2)
+
+
+# ---------------------------------------------------------------------------
+# event dataclasses
+# ---------------------------------------------------------------------------
+def test_events_are_frozen_and_picklable():
+    import pickle
+
+    from repro.serving.engine import Completion
+    c = ChunkEvent(1, 0, (4, 5), 0.5)
+    d = DoneEvent(1, 0, Completion(1, [4, 5], 6, 0.1), 0.6)
+    for ev in (c, d):
+        assert pickle.loads(pickle.dumps(ev)) == ev
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            ev.rid = 9
