@@ -22,7 +22,8 @@ from benchmarks.common import make_requests, save, save_bench, table
 from repro.configs.base import reduce_config
 from repro.configs.registry import get_config
 from repro.models.model import Model
-from repro.serving import ContainerServingPool, ServingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.pool import ContainerServingPool
 
 
 def bench_config(smoke: bool = False):

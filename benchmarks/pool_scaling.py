@@ -32,8 +32,8 @@ from benchmarks.common import make_requests, save, save_bench, table
 from repro.configs.base import reduce_config
 from repro.configs.registry import get_config
 from repro.models.model import Model
-from repro.serving import (AdaptiveServingPool, ContainerServingPool,
-                           synthetic_pool_factory)
+from repro.serving.adaptive import AdaptiveServingPool, synthetic_pool_factory
+from repro.serving.pool import ContainerServingPool
 
 
 def bench_config():
@@ -171,7 +171,8 @@ def measure_streaming(model, params, requests, ns=(1, 2, 4), n_slots=2,
     API could not even observe."""
     import numpy as np
 
-    from repro.serving import Request, Router, ThreadBackend
+    from repro.serving import Request, Router
+    from repro.serving.backend import ThreadBackend
 
     def clone(reqs):
         return [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
@@ -236,6 +237,102 @@ def run_streaming(quick: bool = False) -> str:
     return save("pool_scaling_streaming", {"measured": rows}, lines)
 
 
+def measure_paged(model, params, requests, ns=(1, 2), n_slots=2,
+                  max_len=128, block_size=16, reps: int = 3) -> list[dict]:
+    """Dense vs paged KV cache at EQUAL HBM budget (the paged pool
+    defaults to the dense footprint: ``n_slots × max_len / block_size``
+    blocks). Same streamed wave through the Router both ways; per row:
+    tokens/s, time-to-first-chunk p50/p95, and the max sustained
+    in-flight per container (``engine.peak_active``) — the paged engine
+    must exceed ``n_slots``, the dense engine cannot."""
+    import numpy as np
+
+    from repro.serving import EngineConfig, Request, Router
+    from repro.serving.backend import ThreadBackend
+
+    def clone(reqs):
+        return [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                for r in reqs]
+
+    rows = []
+    for n in ns:
+        for cache in ("dense", "paged"):
+            ecfg = EngineConfig(n_slots=n_slots, max_len=max_len,
+                                cache=cache, block_size=block_size)
+            backend = ThreadBackend(model, params, n, config=ecfg)
+            router = Router(backend)
+            # compile warmup (prefill buckets + chunk lengths)
+            for h in [router.submit(r) for r in clone(requests)]:
+                h.result()
+            best = None
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                handles = [router.submit(r) for r in clone(requests)]
+                router.drain()
+                wall = time.perf_counter() - t0
+                ttfc = [h.ttfc_s for h in handles if h.ttfc_s is not None]
+                toks = sum(len(h.completion.tokens) for h in handles)
+                row = {"n": n, "cache": cache, "wall_s": wall,
+                       "tokens_per_s": toks / wall if wall > 0 else 0.0,
+                       "ttfc_p50_s": float(np.percentile(ttfc, 50)),
+                       "ttfc_p95_s": float(np.percentile(ttfc, 95))}
+                if best is None or row["wall_s"] < best["wall_s"]:
+                    best = row
+            best["n_slots"] = n_slots
+            best["kv_blocks"] = ecfg.resolved_max_blocks
+            best["max_in_flight"] = max(e.peak_active
+                                        for e in backend.engines)
+            router.close()
+            rows.append(best)
+    return rows
+
+
+def run_paged(quick: bool = False) -> str:
+    """The paged-cache lane: emits ``BENCH_paged.json``. The headline
+    number is ``max_in_flight``: at the same HBM budget the paged engine
+    packs strictly more concurrent short requests per container than the
+    dense engine has slots."""
+    import jax
+
+    ns = (1,) if quick else (1, 2)
+    n_requests, max_new, reps = (8, 4, 1) if quick else (24, 6, 3)
+    if quick:
+        from repro.configs.registry import get_config as _get
+        cfg = _get("qwen3-0.6b-reduced")
+    else:
+        cfg = bench_config()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # short prompts + small budgets: the workload the dense layout wastes
+    # a full max_len row on, and the paged layout packs by the block
+    requests = make_requests(cfg, n_requests, max_new, plen_range=(8, 24))
+    rows = measure_paged(model, params, requests, ns=ns, reps=reps)
+    n_slots = rows[0]["n_slots"]
+    paged_rows = [r for r in rows if r["cache"] == "paged"]
+    exceeds = all(r["max_in_flight"] > n_slots for r in paged_rows)
+    lines = ["# Pool scaling — dense vs paged KV cache (equal HBM budget)",
+             "", f"{n_requests} requests × {max_new} new tokens, arch "
+             f"{cfg.name}; n_slots={n_slots}, paged pool = dense footprint "
+             f"({paged_rows[0]['kv_blocks']} blocks); streamed via the "
+             "Router, warm engines", ""]
+    lines += table(
+        ["n", "cache", "wall (s)", "tok/s", "ttfc p50 (s)", "ttfc p95 (s)",
+         "max in-flight"],
+        [[r["n"], r["cache"], r["wall_s"], r["tokens_per_s"],
+          r["ttfc_p50_s"], r["ttfc_p95_s"], r["max_in_flight"]]
+         for r in rows])
+    lines += ["", f"paged max in-flight > n_slots={n_slots} on every "
+              f"count: {exceeds}"]
+    save_bench("paged", {
+        "config": cfg.name, "n_slots": n_slots,
+        "kv_blocks": paged_rows[0]["kv_blocks"],
+        "paged_exceeds_slots": exceeds,
+        "per_n": {f"{r['n']}_{r['cache']}":
+                  {k: v for k, v in r.items() if k not in ("n", "cache")}
+                  for r in rows}})
+    return save("pool_scaling_paged", {"measured": rows}, lines)
+
+
 def run(quick: bool = False) -> str:
     import jax
 
@@ -296,8 +393,14 @@ if __name__ == "__main__":
                     help="request-level streaming lane (Router): "
                          "time-to-first-chunk p50/p95 + streamed tok/s, "
                          "emitting BENCH_streaming.json")
+    ap.add_argument("--paged", action="store_true",
+                    help="dense vs paged KV cache at equal HBM budget: "
+                         "tok/s, ttfc p50/p95, max sustained in-flight, "
+                         "emitting BENCH_paged.json")
     args = ap.parse_args()
-    if args.streaming:
+    if args.paged:
+        print(run_paged(quick=args.quick))
+    elif args.streaming:
         print(run_streaming(quick=args.quick))
     elif args.isolation == "process":
         print(run_process(quick=args.quick))

@@ -61,11 +61,64 @@ def weight_bytes_per_chip(cfg: ArchConfig, spec: ContainerSpec,
     return cfg.param_count() * bytes_per_param / spec.chips_per_container
 
 
+def _pageable_window(window: int, max_len: int) -> bool:
+    # mirror of models.cache.pageable without a core -> models import
+    return window == 0 or window >= max_len
+
+
+def kv_cache_bytes_per_token(cfg: ArchConfig, *, max_len: int = 512,
+                             dtype_bytes: int = 2) -> float:
+    """Bytes of paged KV cache one context token costs across all pageable
+    layers (a logical block spans every layer, so a block costs
+    ``block_size ×`` this). Counts exactly the groups the paged engine
+    pages: full-horizon attention / MLA layers; SSM states, genuinely
+    sliding windows and whisper encoder memories are per-SEQUENCE costs,
+    not per-token, and are excluded."""
+    attn_tok = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+    if cfg.kv_cache_dtype == "int8":
+        # int8 pages + one f32 absmax scale per (token, kv head) for k and v
+        attn_tok = 2 * cfg.n_kv_heads * (cfg.head_dim + 4)
+    mla_tok = (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * dtype_bytes
+    win_ok = _pageable_window(cfg.sliding_window, max_len)
+    if cfg.arch_type == "audio":
+        return cfg.n_layers * attn_tok          # decoder self-attn, W=max_len
+    if cfg.arch_type == "hybrid":
+        return (cfg.n_layers // cfg.shared_attn_every) * attn_tok
+    if cfg.arch_type == "ssm":
+        return 0.0
+    if cfg.is_moe:
+        return cfg.n_layers * (mla_tok if cfg.mla else
+                               (attn_tok if win_ok else 0.0))
+    if cfg.local_global_pattern:
+        per = cfg.local_global_pattern + 1
+        n_global = cfg.n_layers // per
+        n_local = cfg.n_layers - n_global
+        return (n_global + (n_local if win_ok else 0)) * attn_tok
+    return cfg.n_layers * attn_tok if win_ok else 0.0
+
+
+def kv_block_bytes(cfg: ArchConfig, block_size: int = 16, *,
+                   max_len: int = 512, dtype_bytes: int = 2) -> float:
+    """HBM cost of ONE logical KV block (summed over all pageable layers)."""
+    return block_size * kv_cache_bytes_per_token(cfg, max_len=max_len,
+                                                 dtype_bytes=dtype_bytes)
+
+
 def feasible(cfg: ArchConfig, spec: ContainerSpec, hbm_bytes: float = 16e9,
              activation_headroom: float = 0.35,
-             extra_bytes_per_chip: float = 0.0) -> bool:
-    """Does one container's weight shard (+KV/activations) fit per chip?"""
+             extra_bytes_per_chip: float = 0.0, kv_blocks: int = 0,
+             block_size: int = 16, kv_dtype_bytes: int = 2,
+             max_len: int = 512) -> bool:
+    """Does one container's weight shard (+KV/activations) fit per chip?
+    ``kv_blocks > 0`` adds the block-granular paged-cache pool (shared
+    inside a container, so divided over its chips) — the memory model the
+    paged engine actually allocates, replacing the n_slots × max_len
+    dense worst case."""
     need = weight_bytes_per_chip(cfg, spec) + extra_bytes_per_chip
+    if kv_blocks:
+        need += (kv_blocks * kv_block_bytes(cfg, block_size, max_len=max_len,
+                                            dtype_bytes=kv_dtype_bytes)
+                 / spec.chips_per_container)
     return need <= hbm_bytes * (1.0 - activation_headroom)
 
 
@@ -73,14 +126,19 @@ def feasible_counts(cfg: ArchConfig, total_chips: int,
                     hbm_bytes: float = 16e9,
                     max_containers: int | None = None,
                     activation_headroom: float = 0.35,
-                    extra_bytes_per_chip: float = 0.0) -> list[int]:
+                    extra_bytes_per_chip: float = 0.0, kv_blocks: int = 0,
+                    block_size: int = 16, kv_dtype_bytes: int = 2,
+                    max_len: int = 512) -> list[int]:
     """Container counts the online scheduler may search: the power-of-two
     factorisations of the pod whose per-chip weight shard (+headroom) fits
-    — the memory bound that capped the paper's TX2 at 6 containers."""
+    — the memory bound that capped the paper's TX2 at 6 containers. With
+    ``kv_blocks`` set, each container additionally budgets its paged KV
+    pool, so DivideAndSaveScheduler sees the block-granular frontier."""
     return [s.n_containers
             for s in factorizations(total_chips, max_containers)
             if feasible(cfg, s, hbm_bytes, activation_headroom,
-                        extra_bytes_per_chip)]
+                        extra_bytes_per_chip, kv_blocks, block_size,
+                        kv_dtype_bytes, max_len)]
 
 
 def container_mesh(spec: ContainerSpec,

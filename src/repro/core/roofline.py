@@ -91,7 +91,8 @@ def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
 def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
                         overhead_s: float = DISPATCH_OVERHEAD_S,
                         overhead_frac: float = 0.1,
-                        max_chunk: int = 32) -> int:
+                        max_chunk: int = 32,
+                        context_tokens: int = 0) -> int:
     """Decode chunk length from arithmetic intensity: the cost-model hook
     the serving engine (and the adaptive scheduler's wave sizing) use.
 
@@ -103,9 +104,19 @@ def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
     dispatch overhead under ``overhead_frac`` of fused device time,
     clamped to ``[1, max_chunk]`` (compile cost and admission latency
     bound the top).
+
+    ``context_tokens > 0`` adds the KV-cache stream to the memory term:
+    a paged engine runs dozens of in-flight sequences, so each decode
+    step also reads up to ``batch × context × bytes/token`` of cache —
+    at high concurrency that, not the weights, is what the chunk has to
+    amortise the dispatch against.
     """
     flops = 2.0 * cfg.active_param_count() * batch
     bytes_ = 2.0 * cfg.param_count()          # bf16 weight stream per step
+    if context_tokens:
+        from repro.core.containers import kv_cache_bytes_per_token
+        bytes_ += batch * context_tokens * kv_cache_bytes_per_token(
+            cfg, max_len=context_tokens)
     t_tok = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
     amortised = overhead_s * (1.0 - overhead_frac) / overhead_frac
     return max(1, min(max_chunk, math.ceil(amortised / max(t_tok, 1e-12))))

@@ -165,6 +165,39 @@ def decode_attention_blocked(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, H, Kv).astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, table: jax.Array,
+                           lengths: jax.Array, *, softcap: float = 0.0,
+                           k_scale_pages: jax.Array | None = None,
+                           v_scale_pages: jax.Array | None = None
+                           ) -> jax.Array:
+    """Paged flash-decode oracle: gather K/V through a per-sequence block
+    table, then run the SAME blocked online softmax as the dense path.
+
+    q: (B, H, K); k_pages/v_pages: (P, bs, Hkv, K) — a shared physical
+    page pool (the last page is conventionally scratch); table: (B, nblk)
+    int32 page indices per logical block; lengths: (B,) — tokens [0, len)
+    are live. Masked positions (scratch garbage included) contribute an
+    exact 0.0 to the accumulator, so for equal live prefixes the output is
+    bitwise identical to ``decode_attention_blocked`` over a dense
+    (B, nblk*bs) cache — the bit-parity contract the paged serving engine
+    tests pin down.
+    """
+    B = q.shape[0]
+    nblk = table.shape[1]
+    bs = k_pages.shape[1]
+    W = nblk * bs
+    k = k_pages[table].reshape(B, W, *k_pages.shape[2:])
+    v = v_pages[table].reshape(B, W, *v_pages.shape[2:])
+    valid = jnp.arange(W)[None, :] < lengths[:, None]
+    ks = vs = None
+    if k_scale_pages is not None:
+        ks = k_scale_pages[table].reshape(B, W, k_scale_pages.shape[2])
+        vs = v_scale_pages[table].reshape(B, W, v_scale_pages.shape[2])
+    return decode_attention_blocked(q, k, v, valid, softcap=softcap,
+                                    k_scale=ks, v_scale=vs)
+
+
 def mla_decode_ctx(q_lat: jax.Array, q_rope: jax.Array, ckv: jax.Array,
                    k_rope: jax.Array, valid: jax.Array, *,
                    scale: float) -> jax.Array:

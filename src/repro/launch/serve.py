@@ -39,26 +39,37 @@ from repro.core.containers import feasible_counts
 from repro.core.testbed import available_cores
 from repro.launch.mesh import make_container_meshes
 from repro.models.model import Model
-from repro.serving import (AdaptiveServingPool, ChunkEvent,
-                           ContainerServingPool, ProcessBackend,
-                           ProcessContainerPool, Request, Router,
-                           SubmeshBackend, ThreadBackend)
+from repro.serving import ChunkEvent, EngineConfig, Request, Router
+from repro.serving.adaptive import AdaptiveServingPool
+from repro.serving.backend import (ProcessBackend, SubmeshBackend,
+                                   ThreadBackend)
+from repro.serving.pool import ContainerServingPool
+from repro.serving.process_pool import ProcessContainerPool
+
+
+def _engine_config(args) -> EngineConfig:
+    """The per-container engine configuration the flags describe — one
+    frozen EngineConfig threaded through every backend flavour."""
+    return EngineConfig(n_slots=args.slots, cache=args.cache,
+                        block_size=args.block_size,
+                        max_blocks=args.max_blocks)
 
 
 def _make_backend(args, cfg, model, params, n, units):
     """One container backend per isolation flavour — the Router is
     agnostic, so all the flag handling collapses here."""
+    engine_cfg = _engine_config(args)
     if args.isolation == "process":
-        return ProcessBackend(cfg, n, n_slots_per_container=args.slots,
-                              total_cores=units, params_seed=0)
+        return ProcessBackend(cfg, n, total_cores=units, params_seed=0,
+                              config=engine_cfg)
     if args.submesh:
         return SubmeshBackend(model, params, n,
-                              n_slots_per_container=args.slots,
                               meshes=make_container_meshes(units, n),
-                              concurrent=not args.sequential)
+                              concurrent=not args.sequential,
+                              config=engine_cfg)
     return ThreadBackend(model, params, n,
-                         n_slots_per_container=args.slots,
-                         concurrent=not args.sequential)
+                         concurrent=not args.sequential,
+                         config=engine_cfg)
 
 
 def _stream_requests(router: Router, requests, verbose_chunks: bool):
@@ -87,6 +98,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--cache", default="dense", choices=("dense", "paged"),
+                    help="KV cache layout: dense n_slots rows (baseline) "
+                         "or the paged block cache (in-flight bounded by "
+                         "the block budget, not --slots)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged cache)")
+    ap.add_argument("--max-blocks", type=int, default=None,
+                    help="physical KV blocks per container (paged; "
+                         "default: the dense footprint "
+                         "slots*max_len/block_size)")
     ap.add_argument("--waves", type=int, default=6,
                     help="traffic waves (adaptive: scheduler windows)")
     ap.add_argument("--objective", default="energy",
@@ -167,17 +188,12 @@ def main() -> None:
                 _print_wave(args, n, done, per, wall, energy, meshes,
                             router.backend)
             return
+        backend = _make_backend(args, cfg, model, params, n, units)
+        meshes = getattr(backend, "meshes", None)
         if args.isolation == "process":
-            pool = ProcessContainerPool(cfg, n,
-                                        n_slots_per_container=args.slots,
-                                        total_cores=units, params_seed=0)
+            pool = ProcessContainerPool(cfg, n, backend=backend)
         else:
-            meshes = (make_container_meshes(units, n)
-                      if args.submesh else None)
-            pool = ContainerServingPool(model, params, n,
-                                        n_slots_per_container=args.slots,
-                                        concurrent=not args.sequential,
-                                        meshes=meshes)
+            pool = ContainerServingPool(model, params, n, backend=backend)
         done, per, wall, energy = pool.serve_timed(batch_of_requests(0))
         _print_wave(args, n, done, per, wall, energy, meshes,
                     getattr(pool, "backend", None))
@@ -186,8 +202,14 @@ def main() -> None:
         return
 
     # online mode: the scheduler probes container counts, bounded by the
-    # memory-feasible factorisations of the host
-    feasible = feasible_counts(cfg, units) or [1]
+    # memory-feasible factorisations of the host; a paged engine budgets
+    # its block pool too (the block-granular memory model), so the
+    # scheduler searches the frontier the engine actually allocates
+    engine_cfg = _engine_config(args)
+    kv_kw = ({"kv_blocks": engine_cfg.resolved_max_blocks,
+              "block_size": engine_cfg.block_size}
+             if args.cache == "paged" else {})
+    feasible = feasible_counts(cfg, units, **kv_kw) or [1]
     if args.stream:
         # windowed adaptation: no explicit waves — requests stream in,
         # the scheduler observes each window and resizes between windows

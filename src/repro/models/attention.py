@@ -234,9 +234,41 @@ def attn_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
     B = x.shape[0]
     positions = pos[:, None].astype(jnp.int32)
     q, k, v = _qkv(p, cfg, x, positions)
+    bidx = jnp.arange(B)
+    if "k_pages" in cache:
+        # paged layout: write the new token into its block-table page
+        # (idle rows point at the scratch page) and run the paged
+        # flash-decode gather. Only full-horizon layers are paged, so
+        # slot == position and validity is simply position < pos+1 —
+        # the same mask the dense ring produces when W == max_len.
+        bs = cache["k_pages"].shape[1]
+        pidx = cache["table"][bidx, pos // bs]               # (B,)
+        off = jnp.mod(pos, bs)
+        lengths = (pos + 1).astype(jnp.int32)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quant_kv(k[:, 0])
+            vq, vs = _quant_kv(v[:, 0])
+            kp = cache["k_pages"].at[pidx, off].set(kq)
+            vp = cache["v_pages"].at[pidx, off].set(vq)
+            ksp = cache["k_scale_pages"].at[pidx, off].set(ks)
+            vsp = cache["v_scale_pages"].at[pidx, off].set(vs)
+            out = kops.paged_decode_attention(
+                q[:, 0], kp, vp, cache["table"], lengths,
+                softcap=cfg.attn_logit_softcap,
+                k_scale_pages=ksp, v_scale_pages=vsp)
+            y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+            return y, {"table": cache["table"], "k_pages": kp,
+                       "v_pages": vp, "k_scale_pages": ksp,
+                       "v_scale_pages": vsp}
+        kp = cache["k_pages"].at[pidx, off].set(k[:, 0])
+        vp = cache["v_pages"].at[pidx, off].set(v[:, 0])
+        out = kops.paged_decode_attention(q[:, 0], kp, vp, cache["table"],
+                                          lengths,
+                                          softcap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+        return y, {"table": cache["table"], "k_pages": kp, "v_pages": vp}
     W = cache["k"].shape[1]
     slot = jnp.mod(pos, W)                                   # (B,)
-    bidx = jnp.arange(B)
     valid = _ring_positions(W, pos) >= 0                     # (B, W)
     if cfg.kv_cache_dtype == "int8":
         kq, ks = _quant_kv(k[:, 0])
@@ -329,6 +361,30 @@ def mla_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
     k_rope_new = apply_rope(dkv[..., None, r:], positions, cfg.rope_theta)[:, :, 0]
 
     bidx = jnp.arange(B)
+    if "ckv_pages" in cache:
+        # paged latent cache: scatter the new latent/rope-key into the
+        # block-table page, then gather the logical view and reuse the
+        # dense MLA context kernel — masked (garbage) positions still
+        # contribute an exact 0.0, so this bit-matches the dense path.
+        bs = cache["ckv_pages"].shape[1]
+        table = cache["table"]
+        pidx = table[bidx, pos // bs]
+        off = jnp.mod(pos, bs)
+        ckv_pages = cache["ckv_pages"].at[pidx, off].set(ckv_new[:, 0])
+        kr_pages = cache["k_rope_pages"].at[pidx, off].set(k_rope_new[:, 0])
+        S = table.shape[1] * bs
+        ckv = ckv_pages[table].reshape(B, S, r)
+        k_rope = kr_pages[table].reshape(B, S, dr)
+        valid = jnp.arange(S)[None, :] <= pos[:, None]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])[:, 0]
+        ctx_lat = kops.mla_decode_ctx(q_lat, q_rope[:, 0], ckv, k_rope,
+                                      valid,
+                                      scale=(dn + dr) ** -0.5).astype(
+                                          ckv_pages.dtype)
+        out = jnp.einsum("bhr,rhk->bhk", ctx_lat, p["w_uv"])
+        y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None]
+        return y, {"table": table, "ckv_pages": ckv_pages,
+                   "k_rope_pages": kr_pages}
     ckv = cache["ckv"].at[bidx, pos].set(ckv_new[:, 0])
     k_rope = cache["k_rope"].at[bidx, pos].set(k_rope_new[:, 0])
 

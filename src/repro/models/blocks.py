@@ -19,6 +19,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn
+from repro.models import cache as cache_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (constrain_batch, init_mlp, init_norm,
@@ -241,17 +242,31 @@ def cross_decode(p, cfg: ArchConfig, x, cache, pos):
 # cache constructors
 # ---------------------------------------------------------------------------
 def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
-                     dtype, *, window: int = 0):
+                     dtype, *, window: int = 0,
+                     layout: cache_lib.PagedLayout | None = None):
+    """``layout`` switches pageable groups to the block/paged cache.
+    SSM states, genuinely sliding windows (W < max_len) and cross-attn
+    encoder memories have no block-table equivalent and stay dense."""
     if kind == "ssm":
         return ssm_lib.init_mamba2_cache(cfg, batch, dtype)
     if kind == "mla":
+        if layout is not None:
+            return cache_lib.init_paged_mla_cache(cfg, batch, max_len,
+                                                  dtype, layout)
         return attn.init_mla_cache(cfg, batch, max_len, dtype)
     if kind == "cross":
+        self_cache = (cache_lib.init_paged_attn_cache(cfg, batch, max_len,
+                                                      dtype, layout)
+                      if layout is not None
+                      else attn.init_attn_cache(cfg, batch, max_len, dtype))
         return {
-            "self": attn.init_attn_cache(cfg, batch, max_len, dtype),
+            "self": self_cache,
             "mem_k": jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
                                 cfg.head_dim), dtype),
             "mem_v": jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
                                 cfg.head_dim), dtype),
         }
+    if layout is not None and cache_lib.pageable(window, max_len):
+        return cache_lib.init_paged_attn_cache(cfg, batch, max_len, dtype,
+                                               layout)
     return attn.init_attn_cache(cfg, batch, max_len, dtype, window=window)

@@ -304,13 +304,20 @@ class Model:
     # caches
     # ------------------------------------------------------------------
     def _stack_zeros(self, proto, n: int):
+        # replicate the proto across a layer axis. Dense protos are
+        # zero-filled so this equals stacking zeros; paged block tables
+        # must keep their scratch-page fill, which plain zeros would
+        # silently turn into "everyone shares physical page 0".
         return jax.tree.map(
-            lambda a: jnp.zeros((n,) + a.shape, a.dtype), proto)
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), proto)
 
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32) -> Cache:
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   layout=None) -> Cache:
+        """``layout`` (a models.cache.PagedLayout) switches every pageable
+        layer group to the block/paged cache; None keeps the dense rows."""
         cfg, fam = self.cfg, self.fam
         mk = functools.partial(blocks.init_block_cache, cfg, batch=batch,
-                               max_len=max_len, dtype=dtype)
+                               max_len=max_len, dtype=dtype, layout=layout)
         if fam == "dense":
             return {"stack": self._stack_zeros(
                 mk("attn", window=cfg.sliding_window), cfg.n_layers)}

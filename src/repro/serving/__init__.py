@@ -1,22 +1,65 @@
-from repro.serving.adaptive import (AdaptiveServingPool,
-                                    SyntheticContainerPool, WaveResult,
-                                    synthetic_pool_factory)
-from repro.serving.backend import (ContainerBackend, ParamsShare,
-                                   ProcessBackend, SharedParams,
-                                   SubmeshBackend, ThreadBackend,
-                                   save_params, share_params)
-from repro.serving.engine import Completion, Request, ServingEngine
-from repro.serving.events import ChunkEvent, DoneEvent, Event
-from repro.serving.pool import (ContainerResult, ContainerServingPool,
-                                EnergyProxy)
-from repro.serving.process_pool import ProcessContainerPool
-from repro.serving.router import CompletionHandle, Router, WindowStats
+"""Public serving surface.
 
-__all__ = ["Completion", "Request", "ServingEngine", "ContainerResult",
-           "ContainerServingPool", "EnergyProxy", "AdaptiveServingPool",
-           "SyntheticContainerPool", "WaveResult", "synthetic_pool_factory",
-           "ProcessContainerPool", "save_params", "share_params",
-           "ParamsShare", "SharedParams", "ContainerBackend",
-           "ThreadBackend", "ProcessBackend", "SubmeshBackend",
-           "ChunkEvent", "DoneEvent", "Event", "Router",
-           "CompletionHandle", "WindowStats"]
+The request-level streaming API is the supported one: a ``Router`` over a
+``ContainerBackend``, ``Request`` in, typed ``ChunkEvent``/``DoneEvent``
+out, engines configured with a frozen ``EngineConfig`` (dense or paged
+KV cache behind the ``CacheBackend`` protocol — serving/cache.py).
+
+Everything else (wave pools, concrete backends, params handoff helpers)
+is still importable from here for compatibility, but lazily and behind a
+DeprecationWarning — import those names from their home modules
+(``repro.serving.pool``, ``repro.serving.backend``, ...) instead.
+"""
+from __future__ import annotations
+
+import importlib
+import warnings
+
+from repro.serving.backend import ContainerBackend
+from repro.serving.cache import CacheBackend
+from repro.serving.engine import Completion, EngineConfig, Request
+from repro.serving.events import ChunkEvent, DoneEvent
+from repro.serving.router import Router
+
+__all__ = ["Router", "Request", "Completion", "ChunkEvent", "DoneEvent",
+           "ContainerBackend", "EngineConfig", "CacheBackend"]
+
+# legacy surface: name -> home module. Resolved on attribute access with
+# a DeprecationWarning naming the canonical import.
+_LEGACY = {
+    "ServingEngine": "repro.serving.engine",
+    "Event": "repro.serving.events",
+    "ContainerResult": "repro.serving.pool",
+    "ContainerServingPool": "repro.serving.pool",
+    "EnergyProxy": "repro.serving.pool",
+    "AdaptiveServingPool": "repro.serving.adaptive",
+    "SyntheticContainerPool": "repro.serving.adaptive",
+    "WaveResult": "repro.serving.adaptive",
+    "synthetic_pool_factory": "repro.serving.adaptive",
+    "ProcessContainerPool": "repro.serving.process_pool",
+    "ThreadBackend": "repro.serving.backend",
+    "ProcessBackend": "repro.serving.backend",
+    "SubmeshBackend": "repro.serving.backend",
+    "save_params": "repro.serving.backend",
+    "share_params": "repro.serving.backend",
+    "ParamsShare": "repro.serving.backend",
+    "SharedParams": "repro.serving.backend",
+    "CompletionHandle": "repro.serving.router",
+    "WindowStats": "repro.serving.router",
+}
+
+
+def __getattr__(name: str):
+    mod = _LEGACY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    warnings.warn(
+        f"importing {name} from repro.serving is deprecated; import it "
+        f"from {mod} instead (the curated repro.serving surface is "
+        f"{__all__})", DeprecationWarning, stacklevel=2)
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(__all__) | set(_LEGACY) | set(globals()))

@@ -57,7 +57,8 @@ from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core.testbed import assign_core_sets, spawn_pinned
-from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.engine import (Completion, EngineConfig, Request,
+                                  ServingEngine)
 from repro.serving.events import DoneEvent, Event
 
 _READY_POLL_S = 0.25
@@ -116,21 +117,28 @@ class ThreadBackend:
                  n_slots_per_container: int = 4, max_len: int = 512,
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  meshes: Sequence[Any] | None = None,
-                 concurrent: bool = True):
+                 concurrent: bool = True,
+                 config: EngineConfig | None = None):
         if meshes is not None:
             validate_disjoint_meshes(meshes, n_containers)
         self.capacity = n_containers
         self.meshes = meshes
         self.concurrent = concurrent
+        self.config = config or EngineConfig(
+            n_slots=n_slots_per_container, max_len=max_len)
         self._events: deque[Event] = deque()   # append is GIL-atomic
         self._executor = None                  # lazy; poll-step overlap
-        factory = engine_factory or ServingEngine
         self.engines: list[ServingEngine] = []
         for cid in range(n_containers):
-            eng = factory(model, params, n_slots=n_slots_per_container,
-                          max_len=max_len,
-                          **({"mesh": meshes[cid]} if meshes is not None
-                             else {}))
+            mesh_kw = {"mesh": meshes[cid]} if meshes is not None else {}
+            if engine_factory is None:
+                eng = ServingEngine(model, params, self.config, **mesh_kw)
+            else:
+                # custom factories (tests, instrumented engines) keep the
+                # legacy call style; their forwarding path warns once
+                eng = engine_factory(model, params,
+                                     n_slots=self.config.n_slots,
+                                     max_len=self.config.max_len, **mesh_kw)
             eng.container_id = cid
             eng.on_event = self._events.append
             self.engines.append(eng)
@@ -246,14 +254,16 @@ class SubmeshBackend(ThreadBackend):
                  n_slots_per_container: int = 4, max_len: int = 512,
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  meshes: Sequence[Any] | None = None,
-                 concurrent: bool = True):
+                 concurrent: bool = True,
+                 config: EngineConfig | None = None):
         if meshes is None:
             raise ValueError("SubmeshBackend needs per-container meshes "
                              "(launch/mesh.make_container_meshes)")
         super().__init__(model, params, n_containers,
                          n_slots_per_container=n_slots_per_container,
                          max_len=max_len, engine_factory=engine_factory,
-                         meshes=meshes, concurrent=concurrent)
+                         meshes=meshes, concurrent=concurrent,
+                         config=config)
 
 
 # ---------------------------------------------------------------------------
@@ -378,13 +388,25 @@ def _load_params_shm(model, handle: SharedParams):
 # ---------------------------------------------------------------------------
 # process backend
 # ---------------------------------------------------------------------------
+def _engine_config_wire(config: EngineConfig) -> dict:
+    """EngineConfig as a dict of picklable primitives. Pickling the
+    dataclass itself would make the child unpickle (hence import
+    repro.serving.engine, hence jax) at process bootstrap — BEFORE
+    ``spawn_pinned`` applies the cpuset — so the config crosses the pipe
+    as plain fields with the dtype by name instead."""
+    kw = dataclasses.asdict(config)
+    kw["dtype"] = np.dtype(kw["dtype"]).name
+    return kw
+
+
 def _serving_child(conn, cid: int, cfg, params_seed: int,
-                   params_path: str | None, params_shm, n_slots: int,
-                   max_len: int, greedy: bool, seed: int, chunked: bool,
-                   chunk_tokens: int | None) -> None:
+                   params_path: str | None, params_shm,
+                   engine_kw: dict) -> None:
     """Container body (module-level: spawn pickles it by reference).
     Affinity was already applied by ``spawn_pinned``; the jax import below
     therefore sizes XLA's threadpool from the container's cpuset.
+    ``engine_kw`` is ``_engine_config_wire`` output — one EngineConfig,
+    primitives only.
 
     Streaming protocol: ``("submit", [Request...])`` enqueues;
     after every engine macro-step (and after zero-budget submissions,
@@ -396,7 +418,7 @@ def _serving_child(conn, cid: int, cfg, params_seed: int,
         import jax
 
         from repro.models.model import Model
-        from repro.serving.engine import ServingEngine
+        from repro.serving.engine import EngineConfig, ServingEngine
 
         model = Model(cfg)
         if params_shm is not None:
@@ -405,9 +427,7 @@ def _serving_child(conn, cid: int, cfg, params_seed: int,
             params = _load_params(model, params_path)
         else:
             params = model.init(jax.random.PRNGKey(params_seed))
-        engine = ServingEngine(model, params, n_slots=n_slots,
-                               max_len=max_len, greedy=greedy, seed=seed,
-                               chunked=chunked, chunk_tokens=chunk_tokens)
+        engine = ServingEngine(model, params, EngineConfig(**engine_kw))
         # events cross the pipe as-is: the child must stamp the parent's
         # container id or every child would claim container 0
         engine.container_id = cid
@@ -469,20 +489,25 @@ class ProcessBackend:
                  greedy: bool = True, seed: int = 0,
                  chunked: bool = True, chunk_tokens: int | None = None,
                  allow_shared_cores: bool = False,
-                 start_timeout_s: float = 600.0):
+                 start_timeout_s: float = 600.0,
+                 config: EngineConfig | None = None):
         self.cfg = cfg
         self.capacity = n_containers
-        self.n_slots = n_slots_per_container
-        self.max_len = max_len
+        self.config = config or EngineConfig(
+            n_slots=n_slots_per_container, max_len=max_len, greedy=greedy,
+            seed=seed, chunked=chunked, chunk_tokens=chunk_tokens)
+        # legacy attribute surface (readers predate EngineConfig)
+        self.n_slots = self.config.n_slots
+        self.max_len = self.config.max_len
+        self.greedy = self.config.greedy
+        self.seed = self.config.seed
+        self.chunked = self.config.chunked
+        self.chunk_tokens = self.config.chunk_tokens
         self.params_seed = params_seed
         self.params_path = params_path
         self.params_shm = params_shm
         if params_path and params_shm:
             raise ValueError("pass params_path or params_shm, not both")
-        self.greedy = greedy
-        self.seed = seed
-        self.chunked = chunked
-        self.chunk_tokens = chunk_tokens
         self.start_timeout_s = start_timeout_s
         # fail fast, before any spawn: more containers than cores cannot
         # be disjoint (see core/testbed.assign_core_sets)
@@ -513,9 +538,8 @@ class ProcessBackend:
             proc, conn = spawn_pinned(
                 _serving_child, cores,
                 args=(cid, self.cfg, self.params_seed, self.params_path,
-                      self.params_shm, self.n_slots, self.max_len,
-                      self.greedy, self.seed, self.chunked,
-                      self.chunk_tokens), ctx=ctx)
+                      self.params_shm, _engine_config_wire(self.config)),
+                ctx=ctx)
             workers.append((proc, conn))
         reported = []
         try:

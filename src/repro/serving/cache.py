@@ -1,0 +1,360 @@
+"""Cache backends for the serving engine: dense slot rows or paged blocks.
+
+``CacheBackend`` is the protocol the engine programs against — block
+accounting (``alloc``/``append``/``free``), prefill row insertion
+(``insert``) and the device tree itself (``view``). Two implementations:
+
+* ``DenseCache`` — the original ``(n_slots, max_len)`` row layout, kept as
+  the bit-parity baseline (same pattern as ``chunked=False``). alloc/free
+  are no-ops: a row IS the reservation.
+* ``PagedCache`` — block/paged layout (models/cache.py): a shared pool of
+  ``max_blocks`` physical pages plus a per-row block table. Admission
+  reserves ``ceil(tokens / block_size)`` blocks per request — the real
+  token count, not a power-of-two bucket — so in-flight concurrency is
+  bounded by the block budget, not by ``n_slots``.
+
+Both backends own the HOST-side accounting only; the device tree flows
+through the engine's jits (donated) and is re-attached via the ``tree``
+attribute. Paged bookkeeping invariants:
+
+* every table entry outside a row's live reservation points at the
+  SCRATCH page (index ``max_blocks``), so lockstep decode writes for
+  idle rows land in the sink instead of a live block;
+* ``free`` defers: freed rows park in a pending list and their device
+  table rows are cleared to scratch (one jitted scatter in ``flush``,
+  called at the top of each admission round) BEFORE the blocks return to
+  the allocator — otherwise a frozen row could scribble on a block that
+  admission just handed to a new sequence.
+
+``BlockAllocator`` is the pure-Python free-list underneath (hypothesis
+property tests pin down no-leak / no-alias round-trips).
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import PagedLayout, is_paged_group
+
+
+class BlockAllocator:
+    """Free-list over ``n_blocks`` physical page indices. ``alloc`` is
+    all-or-nothing (None when short — callers must not partially admit);
+    ``free`` rejects double-frees and foreign indices."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: list[int] = list(range(n_blocks))
+        self._used: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"free of unallocated block {b}")
+            self._used.discard(b)
+            self._free.append(b)
+
+
+@runtime_checkable
+class CacheBackend(Protocol):
+    """What the serving engine needs from a KV-cache implementation."""
+    n_rows: int
+    tree: Any
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Would ``alloc`` for a ``n_tokens``-position sequence succeed?"""
+        ...
+
+    def alloc(self, row: int, n_tokens: int) -> bool:
+        """Reserve cache space covering ``n_tokens`` positions for
+        ``row``. False (and no side effects) when the budget is short."""
+        ...
+
+    def append(self, row: int, n_tokens: int = 1) -> bool:
+        """Extend ``row``'s reservation by ``n_tokens`` positions."""
+        ...
+
+    def free(self, row: int) -> None:
+        """Release ``row``'s reservation (may defer until ``flush``)."""
+        ...
+
+    def flush(self) -> None:
+        """Make deferred frees effective (device table scrub included)."""
+        ...
+
+    def insert(self, src_cache: Any, rows: list[int]) -> None:
+        """Scatter a prefill mini-cache (dense layout, one row per admitted
+        request) into the engine cache at ``rows``."""
+        ...
+
+    def view(self) -> Any:
+        """The device cache tree the model consumes."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# dense baseline
+# ---------------------------------------------------------------------------
+class DenseCache:
+    """Row-per-slot baseline: capacity IS ``n_rows``, so block accounting
+    degenerates to always-true and ``insert`` is the original moveaxis
+    row scatter (donated, in place)."""
+
+    def __init__(self, tree: Any, n_rows: int, batch_axes: Any, jits: dict):
+        self.tree = tree
+        self.n_rows = n_rows
+        self._axes = batch_axes
+        self._jits = jits
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return True
+
+    def alloc(self, row: int, n_tokens: int) -> bool:
+        return True
+
+    def append(self, row: int, n_tokens: int = 1) -> bool:
+        return True
+
+    def free(self, row: int) -> None:
+        return None
+
+    def flush(self) -> None:
+        return None
+
+    def insert(self, src_cache: Any, rows: list[int]) -> None:
+        key = ("insert", "dense")
+        if key not in self._jits:
+            axes = self._axes
+
+            def ins_fn(cache, src, idx):
+                def ins(e, s, ax):
+                    if ax is None:
+                        return e
+                    em = jnp.moveaxis(e, ax, 0)
+                    sm = jnp.moveaxis(s.astype(e.dtype), ax, 0)
+                    return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
+                return jax.tree.map(ins, cache, src, axes)
+            self._jits[key] = jax.jit(ins_fn, donate_argnums=(0,))
+        self.tree = self._jits[key](self.tree, src_cache,
+                                    jnp.asarray(rows))
+
+    def view(self) -> Any:
+        return self.tree
+
+
+# ---------------------------------------------------------------------------
+# paged backend
+# ---------------------------------------------------------------------------
+def _tree_has_paged_group(tree: Any) -> bool:
+    if isinstance(tree, dict):
+        if is_paged_group(tree):
+            return True
+        return any(_tree_has_paged_group(v) for v in tree.values())
+    return False
+
+
+# (pages key, dense prefill-cache key) pairs a paged group can hold
+_PAGE_PAIRS = (("k_pages", "k"), ("v_pages", "v"),
+               ("k_scale_pages", "k_scale"), ("v_scale_pages", "v_scale"),
+               ("ckv_pages", "ckv"), ("k_rope_pages", "k_rope"))
+
+
+class PagedCache:
+    """Block-table cache backend. Host state: a free-list allocator over
+    the shared physical pages (ONE logical block spans every pageable
+    layer — per-layer tables are replicas) and per-row block lists."""
+
+    def __init__(self, tree: Any, n_rows: int, layout: PagedLayout,
+                 max_len: int, batch_axes: Any, jits: dict):
+        self.tree = tree
+        self.n_rows = n_rows
+        self.layout = layout
+        self.max_len = max_len
+        self._axes = batch_axes
+        self._jits = jits
+        self.allocator = BlockAllocator(layout.max_blocks)
+        self._blocks: list[list[int]] = [[] for _ in range(n_rows)]
+        self._tokens: list[int] = [0] * n_rows
+        self._pending: list[int] = []          # rows freed, not yet scrubbed
+        self._has_paged = _tree_has_paged_group(tree)
+
+    # -- accounting ----------------------------------------------------
+    def _cap(self, n_tokens: int) -> int:
+        return min(n_tokens, self.max_len)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (self.allocator.n_free >=
+                self.layout.n_blocks(self._cap(n_tokens)))
+
+    def alloc(self, row: int, n_tokens: int) -> bool:
+        if self._blocks[row] or row in self._pending:
+            raise ValueError(f"row {row} already holds a reservation")
+        blocks = self.allocator.alloc(
+            self.layout.n_blocks(self._cap(n_tokens)))
+        if blocks is None:
+            return False
+        self._blocks[row] = blocks
+        self._tokens[row] = self._cap(n_tokens)
+        return True
+
+    def append(self, row: int, n_tokens: int = 1) -> bool:
+        new_total = self._tokens[row] + n_tokens
+        if new_total > self.max_len:
+            return False
+        need = (self.layout.n_blocks(new_total)
+                - self.layout.n_blocks(self._tokens[row]))
+        if need > 0:
+            blocks = self.allocator.alloc(need)
+            if blocks is None:
+                return False
+            start = len(self._blocks[row])
+            self._blocks[row].extend(blocks)
+            if self._has_paged:
+                self._write_table(row, start, blocks)
+        self._tokens[row] = new_total
+        return True
+
+    def free(self, row: int) -> None:
+        if not self._blocks[row]:
+            return
+        # deferred: the device table row must be scrubbed to scratch
+        # before these blocks can be re-issued (see flush)
+        self._pending.append(row)
+
+    def flush(self) -> None:
+        if not self._pending:
+            return
+        rows, self._pending = self._pending, []
+        if self._has_paged:
+            self.tree = self._clear_fn()(self.tree,
+                                         jnp.asarray(rows, jnp.int32))
+        for row in rows:
+            self.allocator.free(self._blocks[row])
+            self._blocks[row] = []
+            self._tokens[row] = 0
+
+    # -- device-tree transforms ----------------------------------------
+    def _table_rows(self, rows: list[int]) -> np.ndarray:
+        nblk = self.max_len // self.layout.block_size
+        out = np.full((len(rows), nblk), self.layout.scratch_page, np.int32)
+        for j, row in enumerate(rows):
+            blocks = self._blocks[row]
+            out[j, :len(blocks)] = blocks
+        return out
+
+    def _clear_fn(self):
+        key = ("paged_clear",)
+        if key not in self._jits:
+            scratch = self.layout.scratch_page
+
+            def walk(t, rows):
+                if isinstance(t, dict) and is_paged_group(t):
+                    table = t["table"]
+                    sdims = table.ndim - 2
+                    tf = table.reshape((-1,) + table.shape[sdims:])
+                    tf = tf.at[:, rows, :].set(scratch)
+                    return {**t, "table": tf.reshape(table.shape)}
+                if isinstance(t, dict):
+                    return {k: walk(v, rows) for k, v in t.items()}
+                return t
+
+            self._jits[key] = jax.jit(lambda tree, rows: walk(tree, rows),
+                                      donate_argnums=(0,))
+        return self._jits[key]
+
+    def _write_table(self, row: int, start: int, blocks: list[int]) -> None:
+        """Point logical block indices [start, start+len) of ``row`` at
+        ``blocks`` on device (append path — admission goes via insert)."""
+        key = ("paged_append",)
+        if key not in self._jits:
+            def walk(t, row_, idxs, pages):
+                if isinstance(t, dict) and is_paged_group(t):
+                    table = t["table"]
+                    sdims = table.ndim - 2
+                    tf = table.reshape((-1,) + table.shape[sdims:])
+                    tf = tf.at[:, row_, idxs].set(pages)
+                    return {**t, "table": tf.reshape(table.shape)}
+                if isinstance(t, dict):
+                    return {k: walk(v, row_, idxs, pages)
+                            for k, v in t.items()}
+                return t
+
+            self._jits[key] = jax.jit(
+                lambda tree, row_, idxs, pages:
+                    walk(tree, row_, idxs, pages), donate_argnums=(0,))
+        idxs = jnp.arange(start, start + len(blocks), dtype=jnp.int32)
+        self.tree = self._jits[key](self.tree, jnp.int32(row), idxs,
+                                    jnp.asarray(blocks, jnp.int32))
+
+    def insert(self, src_cache: Any, rows: list[int]) -> None:
+        """Scatter the dense prefill mini-cache into the paged tree: every
+        position of each source row lands at ``(table[p // bs], p % bs)``
+        — positions beyond the row's reservation hit the scratch page, so
+        bucket-padded prefill garbage goes to the sink, while live
+        positions are copied verbatim (the bit-parity guarantee)."""
+        key = ("insert", "paged")
+        if key not in self._jits:
+            axes = self._axes
+
+            def group_ins(dst, src, rows_, table_rows):
+                out = dict(dst)
+                table = dst["table"]
+                sdims = table.ndim - 2
+                tf = table.reshape((-1,) + table.shape[sdims:])
+                tf = tf.at[:, rows_, :].set(table_rows[None])
+                out["table"] = tf.reshape(table.shape)
+                for dk, sk in _PAGE_PAIRS:
+                    if dk not in dst:
+                        continue
+                    pages, s = dst[dk], src[sk]
+                    bs = pages.shape[sdims + 1]
+                    W = s.shape[sdims + 1]
+                    pos = jnp.arange(W)
+                    pp = table_rows[:, pos // bs]            # (n, W)
+                    off = jnp.broadcast_to(pos % bs, pp.shape)
+                    pf = pages.reshape((-1,) + pages.shape[sdims:])
+                    sf = s.astype(pages.dtype).reshape(
+                        (-1,) + s.shape[sdims:])
+                    scat = jax.vmap(
+                        lambda pg, sr: pg.at[pp, off].set(sr))(pf, sf)
+                    out[dk] = scat.reshape(pages.shape)
+                return out
+
+            def walk(dst, src, ax, rows_, table_rows):
+                if isinstance(dst, dict) and is_paged_group(dst):
+                    return group_ins(dst, src, rows_, table_rows)
+                if isinstance(dst, dict):
+                    return {k: walk(dst[k], src[k], ax[k], rows_,
+                                    table_rows) for k in dst}
+                if ax is None:
+                    return dst
+                em = jnp.moveaxis(dst, ax, 0)
+                sm = jnp.moveaxis(src.astype(dst.dtype), ax, 0)
+                return jnp.moveaxis(em.at[rows_].set(sm), 0, ax)
+
+            self._jits[key] = jax.jit(
+                lambda tree, src, rows_, table_rows:
+                    walk(tree, src, axes, rows_, table_rows),
+                donate_argnums=(0,))
+        self.tree = self._jits[key](self.tree, src_cache,
+                                    jnp.asarray(rows, jnp.int32),
+                                    jnp.asarray(self._table_rows(rows)))
+
+    def view(self) -> Any:
+        return self.tree

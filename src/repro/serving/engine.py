@@ -9,6 +9,19 @@ slots decode in lockstep HLO with per-slot positions (the cache/ring masks
 make ragged depths correct — see models/attention.py). Finished slots are
 refilled from the queue mid-decode: continuous batching.
 
+With ``EngineConfig(cache="paged")`` the dense rows are replaced by the
+block/paged KV cache (models/cache.py + serving/cache.py): admission
+reserves ``ceil(tokens / block_size)`` physical pages per request out of
+a shared pool, so in-flight concurrency is bounded by the BLOCK budget,
+not ``n_slots``, and ragged prompts pay no cache padding (prefill still
+pads its compute batch to ``PROMPT_BUCKETS`` to bound compiled shapes).
+Admission is strict FIFO with no bucket barrier: consecutive queue heads
+sharing an admit key batch into one prefill, and a head that doesn't fit
+stalls admission rather than being scanned past. Greedy decode through
+the paged path is bit-identical to the dense baseline — masked (scratch
+/ garbage) positions contribute an exact 0.0 to the attention
+accumulator, the parity the paged tests pin down.
+
 Decode runs in **macro-steps**: each ``step()`` admits, then runs one
 fused chunk of up to ``chunk_tokens`` decode iterations entirely on
 device (``Model.decode_chunk`` — a ``lax.scan`` with sampling and stop
@@ -67,7 +80,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.roofline import decode_chunk_tokens
+from repro.models.cache import PagedLayout
 from repro.models.model import Model
+from repro.serving.cache import DenseCache, PagedCache
 from repro.serving.events import ChunkEvent, DoneEvent
 
 
@@ -87,7 +102,15 @@ class Completion:
     latency_s: float = 0.0
 
 
-def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+# THE prompt-length bucket table. The engine's padded batch admission and
+# the router's bucket-aware tie-breaking must agree on it, so it lives
+# here once — a paged engine admits at real lengths (no buckets in the
+# cache), but its prefill COMPUTE still pads to these buckets to bound
+# the number of compiled prefill shapes.
+PROMPT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def _bucket(n: int, buckets=PROMPT_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
@@ -95,6 +118,62 @@ def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
     # prompts share prefill executables instead of each distinct length
     # compiling its own (a compile spike mid-serving)
     return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen, picklable configuration for one ServingEngine.
+
+    ``cache="dense"`` is the bit-parity baseline: ``n_slots`` private
+    ``(max_len, ...)`` cache rows. ``cache="paged"`` switches every
+    pageable layer group to the block cache (models/cache.py): a pool of
+    ``max_blocks`` shared pages of ``block_size`` tokens, per-sequence
+    block tables, and up to ``max_seqs`` resident sequences — in-flight
+    concurrency is then bounded by the block budget, not ``n_slots``.
+
+    Defaults keep ``max_blocks`` at the dense footprint
+    (``n_slots × max_len / block_size``): same HBM, strictly more
+    admissible short requests.
+    """
+    n_slots: int = 4
+    max_len: int = 512
+    cache: str = "dense"
+    block_size: int = 16
+    max_blocks: int | None = None
+    max_seqs: int | None = None
+    dtype: Any = jnp.float32
+    greedy: bool = True
+    seed: int = 0
+    batch_admit: bool = True
+    chunked: bool = True
+    chunk_tokens: int | None = None
+
+    def __post_init__(self):
+        if self.cache not in ("dense", "paged"):
+            raise ValueError(f"cache must be 'dense' or 'paged', "
+                             f"got {self.cache!r}")
+        if self.cache == "paged" and self.max_len % self.block_size:
+            raise ValueError(
+                f"max_len={self.max_len} must be a multiple of "
+                f"block_size={self.block_size} (a sequence's logical "
+                "blocks must tile the horizon exactly)")
+
+    @property
+    def resolved_max_blocks(self) -> int:
+        if self.max_blocks is not None:
+            return self.max_blocks
+        return max(1, self.n_slots * self.max_len // self.block_size)
+
+    @property
+    def resolved_max_seqs(self) -> int:
+        return (self.max_seqs if self.max_seqs is not None
+                else self.resolved_max_blocks)
+
+    @property
+    def n_rows(self) -> int:
+        """Resident-sequence capacity = batch dim of the engine cache."""
+        return (self.resolved_max_seqs if self.cache == "paged"
+                else self.n_slots)
 
 
 @dataclasses.dataclass
@@ -131,16 +210,33 @@ class ServingEngine:
     on_event: Callable[[Any], None] | None = None
     container_id: int = 0
 
-    def __init__(self, model: Model, params: Any, n_slots: int = 4,
-                 max_len: int = 512, dtype=jnp.float32,
-                 greedy: bool = True, seed: int = 0,
-                 batch_admit: bool = True, chunked: bool = True,
-                 chunk_tokens: int | None = None,
-                 mesh=None, rules=None):
+    def __init__(self, model: Model, params: Any,
+                 config: EngineConfig | None = None, *,
+                 mesh=None, rules=None, **legacy_kw):
+        if legacy_kw:
+            if config is not None:
+                raise TypeError(
+                    "pass either an EngineConfig or legacy keyword "
+                    f"arguments, not both (got {sorted(legacy_kw)})")
+            warnings.warn(
+                "ServingEngine(model, params, n_slots=..., ...) keyword "
+                "arguments are deprecated; pass "
+                "ServingEngine(model, params, EngineConfig(...)) instead",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy_kw)
+        if config is None:
+            config = EngineConfig()
+        self.config = config
         self.model = model
         self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
+        self.n_slots = config.n_slots
+        self.max_len = config.max_len
+        self.paged = config.cache == "paged"
+        self.layout = (PagedLayout(config.block_size,
+                                   config.resolved_max_blocks)
+                       if self.paged else None)
+        n_rows = config.n_rows
+        dtype, layout = config.dtype, self.layout
         self.mesh = mesh
         self.rules = rules
         if mesh is not None and rules is None:
@@ -155,23 +251,29 @@ class ServingEngine:
             self.params = jax.device_put(
                 params, self.rules.container_placement(params))
             cache_struct = jax.eval_shape(
-                lambda: model.init_cache(n_slots, max_len, dtype))
-            self.cache = jax.jit(
-                lambda: model.init_cache(n_slots, max_len, dtype),
+                lambda: model.init_cache(n_rows, config.max_len, dtype,
+                                         layout=layout))
+            tree = jax.jit(
+                lambda: model.init_cache(n_rows, config.max_len, dtype,
+                                         layout=layout),
                 out_shardings=self.rules.container_placement(cache_struct))()
         else:
-            self.cache = model.init_cache(n_slots, max_len, dtype)
+            tree = model.init_cache(n_rows, config.max_len, dtype,
+                                    layout=layout)
         self.device_set = (self.rules.device_set if self.rules is not None
                            else frozenset())
-        self.slots = [_Slot() for _ in range(n_slots)]
+        self.slots = [_Slot() for _ in range(n_rows)]
         self.queue: deque[Request] = deque()
         self.done: list[Completion] = []
-        self.greedy = greedy
-        self.batch_admit = batch_admit
-        self.chunked = chunked
-        self.chunk_tokens = (chunk_tokens if chunk_tokens is not None
-                             else decode_chunk_tokens(model.cfg, n_slots))
-        self._key = jax.random.PRNGKey(seed)
+        self.greedy = config.greedy
+        self.batch_admit = config.batch_admit
+        self.chunked = config.chunked
+        self.chunk_tokens = (
+            config.chunk_tokens if config.chunk_tokens is not None
+            else decode_chunk_tokens(
+                model.cfg, n_rows,
+                context_tokens=config.max_len if self.paged else 0))
+        self._key = jax.random.PRNGKey(config.seed)
         self._jits = _shared_jits(model)
         if "decode" not in self._jits:
             self._jits["decode"] = jax.jit(model.decode_step)
@@ -179,18 +281,37 @@ class ServingEngine:
         # which axis of each cache leaf is the batch/slot axis (None for
         # scalar or batch-free leaves) — inferred once from shape structs so
         # row insertion never has to guess from runtime shapes (which is
-        # ambiguous when a prefill batch happens to equal n_slots)
-        one = jax.eval_shape(lambda: model.init_cache(1, max_len, dtype))
-        two = jax.eval_shape(lambda: model.init_cache(2, max_len, dtype))
+        # ambiguous when a prefill batch happens to equal n_slots). Always
+        # derived from the DENSE layout: it describes the prefill
+        # mini-cache rows both backends scatter from.
+        ml = config.max_len
+        one = jax.eval_shape(lambda: model.init_cache(1, ml, dtype))
+        two = jax.eval_shape(lambda: model.init_cache(2, ml, dtype))
         self._batch_axes = jax.tree.map(
             lambda a, b: next((i for i, (x, y) in
                                enumerate(zip(a.shape, b.shape)) if x != y),
                               None), one, two)
+        if self.paged:
+            self.cache_backend = PagedCache(tree, n_rows, layout, ml,
+                                            self._batch_axes, self._jits)
+        else:
+            self.cache_backend = DenseCache(tree, n_rows,
+                                            self._batch_axes, self._jits)
         self.steps = 0                # step() calls that found work
         self.chunks = 0               # fused decode chunks dispatched
         self.tokens_generated = 0     # tokens emitted (prefill + decode)
         self.busy_s = 0.0             # wall time spent inside step()
+        self.peak_active = 0          # max concurrently active rows seen
         self.budget_exhausted = False  # last run() hit max_steps with work
+
+    @property
+    def cache(self) -> Any:
+        """The device cache tree (owned by the cache backend)."""
+        return self.cache_backend.tree
+
+    @cache.setter
+    def cache(self, tree: Any) -> None:
+        self.cache_backend.tree = tree
 
     # ------------------------------------------------------------------
     def _emit_chunk(self, rid: int, tokens, now: float) -> None:
@@ -244,7 +365,8 @@ class ServingEngine:
     def _chunk_fn(self, n_tokens: int):
         """Fused decode executable for a chunk of ``n_tokens`` steps; the
         engine cache is donated (arg 1), so the KV rings update in place."""
-        key = ("chunk", n_tokens, self.max_len, self.greedy)
+        key = ("chunk", n_tokens, self.max_len, self.greedy,
+               "paged" if self.paged else "dense")
         if key not in self._jits:
             m, ml, greedy = self.model, self.max_len, self.greedy
 
@@ -255,24 +377,11 @@ class ServingEngine:
         return self._jits[key]
 
     def _insert_rows(self, src_cache: Any, slot_ids: list[int]) -> None:
-        """Scatter prefill cache rows into their slots (any slot set, any
-        batch size — including a full batch of n_slots rows). The engine
-        cache is donated into the jitted scatter, so admission updates the
-        cache in place too."""
-        if "insert" not in self._jits:
-            axes = self._batch_axes
-
-            def ins_fn(cache, src, idx):
-                def ins(e, s, ax):
-                    if ax is None:
-                        return e
-                    em = jnp.moveaxis(e, ax, 0)
-                    sm = jnp.moveaxis(s.astype(e.dtype), ax, 0)
-                    return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
-                return jax.tree.map(ins, cache, src, axes)
-            self._jits["insert"] = jax.jit(ins_fn, donate_argnums=(0,))
-        self.cache = self._jits["insert"](self.cache, src_cache,
-                                          jnp.asarray(slot_ids))
+        """Scatter prefill cache rows into their slots via the cache
+        backend (dense: moveaxis row scatter; paged: block-table scatter).
+        The engine cache is donated into the jitted scatter either way,
+        so admission updates the cache in place too."""
+        self.cache_backend.insert(src_cache, slot_ids)
 
     # ------------------------------------------------------------------
     def _admit_key(self, req: Request):
@@ -295,12 +404,53 @@ class ServingEngine:
         return take
 
     def _admit(self) -> None:
+        if self.paged:
+            self._admit_paged()
+            return
         free = [i for i, s in enumerate(self.slots) if not s.active]
         while free and self.queue:
             reqs = (self._take_bucket(len(free)) if self.batch_admit
                     else [self.queue.popleft()])
             slot_ids = [free.pop(0) for _ in reqs]
             self._admit_batch(slot_ids, reqs)
+
+    def _cache_tokens(self, req: Request) -> int:
+        """Cache positions a request can ever touch: vision prefix +
+        prompt + decoded tokens, clamped to the horizon (decode stops at
+        max_len - 1 regardless of budget)."""
+        nv = self.model.cfg.n_vision_tokens or 0
+        return min(nv + len(req.prompt) + req.max_new_tokens, self.max_len)
+
+    def _admit_paged(self) -> None:
+        """Block-budget admission, strict FIFO and bucket-barrier-free:
+        pop the queue head while a free row AND enough free blocks exist,
+        batching the maximal run of consecutive heads that share an admit
+        key (one padded prefill dispatch per run — padding here is
+        COMPUTE-only; cache memory is reserved at the request's real
+        token count, so ragged prompts pay no cache padding). A head that
+        does not fit stops admission — no scanning past it for smaller
+        requests, so nothing starves."""
+        cb = self.cache_backend
+        cb.flush()   # scrub freed rows' tables, reclaim their blocks
+        free = [i for i, s in enumerate(self.slots) if not s.active]
+        blocked = False
+        while free and self.queue and not blocked:
+            key = self._admit_key(self.queue[0])
+            take: list[Request] = []
+            slot_ids: list[int] = []
+            limit = len(free) if self.batch_admit else 1
+            while self.queue and free and len(take) < limit:
+                req = self.queue[0]
+                if self._admit_key(req) != key:
+                    break
+                if not cb.alloc(free[0], self._cache_tokens(req)):
+                    blocked = True
+                    break
+                slot_ids.append(free.pop(0))
+                take.append(self.queue.popleft())
+            if not take:
+                break
+            self._admit_batch(slot_ids, take)
 
     def _admit_batch(self, slot_ids: list[int],
                      reqs: list[Request]) -> None:
@@ -335,7 +485,10 @@ class ServingEngine:
             # the prefill sample is the request's first streamed chunk —
             # its arrival is the time-to-first-chunk the Router windows
             self._emit_chunk(r.rid, (int(first[j]),), now)
-            if slot.remaining <= 0:
+        self.peak_active = max(self.peak_active,
+                               sum(1 for s in self.slots if s.active))
+        for i in slot_ids:
+            if self.slots[i].active and self.slots[i].remaining <= 0:
                 self._finish(i)
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
@@ -352,6 +505,9 @@ class ServingEngine:
         comp = Completion(s.rid, s.generated, s.prompt_len, now - s.started)
         self.done.append(comp)
         self._emit_done(comp, now)
+        # release the row's cache reservation (paged: deferred until the
+        # next admission flush so the device table is scrubbed first)
+        self.cache_backend.free(i)
         self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
@@ -369,10 +525,11 @@ class ServingEngine:
         # clamp value (ragged budgets would otherwise trigger a compile
         # spike mid-serving on each new length)
         n_tokens = 1 << (exact.bit_length() - 1)
-        tok = np.zeros((self.n_slots,), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        rem = np.zeros((self.n_slots,), np.int32)
-        act = np.zeros((self.n_slots,), bool)
+        n_rows = len(self.slots)
+        tok = np.zeros((n_rows,), np.int32)
+        pos = np.zeros((n_rows,), np.int32)
+        rem = np.zeros((n_rows,), np.int32)
+        act = np.zeros((n_rows,), bool)
         for i in active:
             s = self.slots[i]
             tok[i], pos[i], rem[i], act[i] = (s.generated[-1], s.pos,
@@ -406,8 +563,9 @@ class ServingEngine:
         """Per-token baseline path: one dispatch + one host sync per
         generated token, undonated cache (full copy per step) — kept so
         the fused path's win stays measurable (benchmarks)."""
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
+        n_rows = len(self.slots)
+        tokens = np.zeros((n_rows, 1), np.int32)
+        pos = np.zeros((n_rows,), np.int32)
         for i in active:
             s = self.slots[i]
             tokens[i, 0] = s.generated[-1]

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -41,6 +42,27 @@ from repro.core import splitter
 from repro.models.model import Model
 from repro.serving.backend import SubmeshBackend, ThreadBackend
 from repro.serving.engine import Completion, Request, ServingEngine
+
+# the wave shims warn ONCE per process (not per wave — benchmark loops
+# call them thousands of times); tests reset this to re-arm the warning
+_WAVE_SHIM_WARNED = False
+
+
+def _warn_wave_shim(api: str) -> None:
+    """One documented DeprecationWarning for the whole wave surface:
+    ``serve_timed``/``serve_wave`` batch a complete wave and block on the
+    slowest container; ``Router.submit`` + ``CompletionHandle.stream()``
+    is the request-level replacement (continuous admission, typed chunk
+    events, no wave barrier)."""
+    global _WAVE_SHIM_WARNED
+    if _WAVE_SHIM_WARNED:
+        return
+    _WAVE_SHIM_WARNED = True
+    warnings.warn(
+        f"{api} is a legacy wave shim: it blocks until the slowest "
+        "container drains. Prefer Router.submit(...) and stream the "
+        "returned handle (serving/router.py)", DeprecationWarning,
+        stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +178,7 @@ class ContainerServingPool:
         """Serve a wave (the wave shim: submit-all + drain); returns
         (ordered completions, per-container results, wave wall seconds,
         wave energy joules)."""
+        _warn_wave_shim("ContainerServingPool.serve_timed")
         if concurrent is None:
             concurrent = self.concurrent
         segments = splitter.split(requests, self.n_containers)

@@ -33,7 +33,8 @@ from repro.core import splitter
 from repro.serving.backend import (ParamsShare, ProcessBackend, SharedParams,
                                    save_params, share_params)
 from repro.serving.engine import Completion, Request
-from repro.serving.pool import (ContainerResult, EnergyProxy, assemble_wave)
+from repro.serving.pool import (ContainerResult, EnergyProxy, _warn_wave_shim,
+                                assemble_wave)
 
 __all__ = ["ProcessContainerPool", "save_params", "share_params",
            "ParamsShare", "SharedParams"]
@@ -100,6 +101,7 @@ class ProcessContainerPool:
         """Serve a wave; same contract as ContainerServingPool.serve_timed.
         ``concurrent`` is accepted for API compatibility and ignored —
         processes always overlap (that is the point of this pool)."""
+        _warn_wave_shim("ProcessContainerPool.serve_timed")
         del concurrent
         self.backend.warm()     # spawn cost stays outside the wave wall
         segments = splitter.split(requests, self.n_containers)

@@ -43,8 +43,9 @@ from typing import Any, Callable, Iterator, Sequence
 from repro.core.scheduler import DivideAndSaveScheduler
 from repro.serving.engine import Completion, Request, _bucket
 from repro.serving.events import ChunkEvent, DoneEvent, Event
-from repro.serving.pool import (ContainerResult, EnergyProxy, assemble_wave,
-                                latency_percentiles, percentiles)
+from repro.serving.pool import (ContainerResult, EnergyProxy, _warn_wave_shim,
+                                assemble_wave, latency_percentiles,
+                                percentiles)
 
 _IDLE_SLEEP_S = 0.002
 
@@ -329,6 +330,7 @@ class Router:
         """The legacy wave API on top of streaming: submit-all + drain,
         per-container accounting reconstructed with the existing
         ``assemble_wave``. Completions come back in submission order."""
+        _warn_wave_shim("Router.serve_wave")
         # pin the backend for the whole wave: an adaptive window boundary
         # inside drain() may swap self.backend, and this wave's stats
         # deltas must come from the backend that served it

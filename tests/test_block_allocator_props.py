@@ -1,0 +1,79 @@
+"""Property tests (hypothesis) for the paged-cache block allocator.
+
+Invariants: alloc/free round-trips conserve the pool exactly (no leaks),
+live reservations never alias (no block handed out twice), alloc is
+all-or-nothing (a refused alloc has zero side effects), and double-frees
+/ foreign frees always raise. Driven by a random interleaving of
+alloc/free operations — the shape of traffic the paged engine's
+admission and deferred-release actually produce.
+
+Skipped (by conftest) when hypothesis isn't installed — it lives in the
+``dev`` extra, so the CI no-hypothesis job stays green by skip.
+"""
+from __future__ import annotations
+
+import pytest
+
+# conftest's source-grep skip covers discovery runs; this covers the file
+# being named explicitly on the pytest command line (e.g. the CI lane)
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings      # noqa: E402
+from hypothesis import strategies as st     # noqa: E402
+
+from repro.serving.cache import BlockAllocator      # noqa: E402
+
+
+@given(st.integers(1, 64), st.lists(st.integers(0, 70), max_size=40),
+       st.randoms())
+@settings(max_examples=200, deadline=None)
+def test_alloc_free_roundtrip_conserves_pool(n_blocks, sizes, rnd):
+    """Random alloc/free interleaving: free + live == pool at every step,
+    live reservations stay pairwise disjoint, and draining every
+    reservation restores the full pool."""
+    a = BlockAllocator(n_blocks)
+    live: list[list[int]] = []
+    for n in sizes:
+        if live and rnd.random() < 0.4:
+            a.free(live.pop(rnd.randrange(len(live))))
+        free_now = n_blocks - sum(map(len, live))
+        got = a.alloc(n)
+        if n > free_now:
+            assert got is None              # over budget: refused...
+        if got is None:
+            assert a.n_free == free_now     # ...with zero side effects
+            continue
+        assert len(got) == n
+        live.append(got)
+        flat = [b for r in live for b in r]
+        assert len(flat) == len(set(flat)), "aliased live blocks"
+        assert all(0 <= b < n_blocks for b in flat)
+        assert a.n_free == n_blocks - len(flat)
+    for r in live:
+        a.free(r)
+    assert a.n_free == n_blocks
+
+
+@given(st.integers(1, 32), st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_all_or_nothing(n_blocks, n):
+    a = BlockAllocator(n_blocks)
+    got = a.alloc(n)
+    if n <= n_blocks:
+        assert got is not None and a.n_free == n_blocks - n
+    else:
+        assert got is None and a.n_free == n_blocks
+
+
+@given(st.integers(1, 32), st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_double_and_foreign_free_raise(n_blocks, n):
+    a = BlockAllocator(n_blocks)
+    got = a.alloc(min(n, n_blocks))
+    assert got is not None
+    a.free(got)
+    with pytest.raises(ValueError):
+        a.free(got)
+    with pytest.raises(ValueError):
+        a.free([n_blocks + 7])
+    assert a.n_free == n_blocks

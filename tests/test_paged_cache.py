@@ -1,0 +1,231 @@
+"""Paged KV cache behind the CacheBackend protocol: greedy bit-parity
+with the dense baseline across every model family, block-budget
+admission, the EngineConfig surface, and the curated public API.
+
+Parity methodology: BOTH engines receive the SAME precomputed Request
+lists (a shared rng between the two serves would silently hand them
+different prompts and fail for the wrong reason). The paged engine is
+deliberately run with its full block budget — it admits MORE requests
+concurrently than ``n_slots`` (``peak_active`` asserts it) and must
+still emit identical greedy streams per rid.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serving import EngineConfig
+from repro.serving.cache import BlockAllocator, CacheBackend, PagedCache
+from repro.serving.engine import (PROMPT_BUCKETS, Request, ServingEngine,
+                                  _bucket)
+
+# one representative per model family (see models/model.py's family table)
+FAMILY_ARCHS = [
+    "qwen3-0.6b",        # dense
+    "gemma3-27b",        # gemma (local/global sliding-window pattern)
+    "mixtral-8x22b",     # moe (GQA)
+    "mamba2-2.7b",       # ssm
+    "zamba2-7b",         # zamba (ssm + shared attention)
+    "whisper-large-v3",  # whisper (encoder-decoder, cross-attention)
+]
+
+# ragged prompts around the block boundary (block_size=16: 15/16/17),
+# ragged budgets so slots finish mid-chunk, a 2-token prompt, and
+# enough requests that the paged engine's admission exceeds n_slots=2
+SPEC = [(5, 4), (15, 3), (16, 5), (17, 2), (9, 6), (2, 1), (12, 8), (7, 5)]
+
+DENSE = EngineConfig(n_slots=2, max_len=64)
+PAGED = EngineConfig(n_slots=2, max_len=64, cache="paged", block_size=16)
+
+
+def _requests(cfg, plens_max_new, seed=0):
+    """Deterministic ragged requests; whisper/vlm extras attached. A
+    fresh seeded rng per call: two calls build identical prompt lists."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (plen, max_new) in enumerate(plens_max_new):
+        extras = {}
+        if cfg.n_encoder_layers:
+            extras["audio_frames"] = 0.1 * rng.standard_normal(
+                (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        if cfg.n_vision_tokens:
+            extras["vision_embeds"] = 0.1 * rng.standard_normal(
+                (cfg.n_vision_tokens, cfg.vision_embed_dim)).astype(
+                    np.float32)
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                       dtype=np.int32),
+            max_new_tokens=max_new, extras=extras))
+    return reqs
+
+
+def _serve(model, params, reqs, config):
+    eng = ServingEngine(model, params, config)
+    eng.submit_many([Request(r.rid, r.prompt, r.max_new_tokens, r.extras)
+                     for r in reqs])
+    return {c.rid: c.tokens for c in eng.run()}, eng
+
+
+# ---------------------------------------------------------------------------
+# bit-parity across every family, in-flight beyond n_slots
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_matches_dense_greedy(arch, reduced_models):
+    """Identical greedy token streams per rid, with the paged engine
+    admitting MORE concurrent requests than the dense engine has slots —
+    the cache layout (and the admission width it allows) must be
+    semantically invisible."""
+    model, params = reduced_models[arch]
+    reqs = _requests(model.cfg, SPEC)
+    want, _ = _serve(model, params, reqs, DENSE)
+    got, eng = _serve(model, params, reqs, PAGED)
+    assert got == want
+    assert eng.peak_active > DENSE.n_slots, (
+        "paged engine never exceeded the dense slot count — the "
+        "block-budget admission isn't doing its job")
+
+
+def test_paged_block_exhaustion_completes(reduced_models):
+    """A block pool smaller than the workload: admission stalls on the
+    queue head when the allocator runs dry (strict FIFO, no scan-past),
+    frees blocks as requests finish, and still completes everything with
+    dense-identical streams."""
+    model, params = reduced_models["qwen3-0.6b"]
+    tight = EngineConfig(n_slots=2, max_len=64, cache="paged",
+                         block_size=16, max_blocks=3)
+    reqs = _requests(model.cfg, [(16, 4), (16, 4), (16, 4), (5, 2)])
+    want, _ = _serve(model, params, reqs, DENSE)
+    got, eng = _serve(model, params, reqs, tight)
+    assert got == want
+    # ≤3 blocks: never more than one 2-block request resident at a time
+    assert eng.peak_active <= 2
+    # block conservation: free + held (incl. pending-release rows) = pool
+    cb = eng.cache_backend
+    assert cb.allocator.n_free + sum(len(b) for b in cb._blocks) == 3
+
+
+def test_paged_respects_max_len_truncation(reduced_models):
+    """Budgets past the horizon: both layouts clamp at max_len - 1 and
+    stay bit-identical (the paged reservation is clamped too)."""
+    model, params = reduced_models["qwen3-0.6b"]
+    dense = EngineConfig(n_slots=2, max_len=32)
+    paged = EngineConfig(n_slots=2, max_len=32, cache="paged",
+                         block_size=16)
+    reqs = _requests(model.cfg, [(8, 100), (30, 100), (17, 10)])
+    want, _ = _serve(model, params, reqs, dense)
+    got, _ = _serve(model, params, reqs, paged)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig surface
+# ---------------------------------------------------------------------------
+def test_engine_legacy_kwargs_warn_and_forward(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = ServingEngine(model, params, n_slots=3, max_len=32)
+    assert eng.config == EngineConfig(n_slots=3, max_len=32)
+    assert eng.n_slots == 3 and eng.max_len == 32
+
+
+def test_engine_rejects_config_plus_legacy_kwargs(reduced_models):
+    model, params = reduced_models["qwen3-0.6b"]
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(model, params, EngineConfig(), n_slots=2)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="dense.*paged|paged.*dense"):
+        EngineConfig(cache="bogus")
+    with pytest.raises(ValueError, match="multiple"):
+        EngineConfig(cache="paged", max_len=60, block_size=16)
+    cfg = EngineConfig(n_slots=2, max_len=64, cache="paged", block_size=16)
+    assert cfg.resolved_max_blocks == 8          # dense footprint default
+    assert cfg.resolved_max_seqs == 8
+    assert cfg.n_rows == 8
+    assert EngineConfig(n_slots=2, max_len=64).n_rows == 2
+
+
+def test_engine_cache_property_proxies_backend(reduced_models):
+    """Both layouts satisfy the runtime-checkable CacheBackend protocol
+    and the engine's ``cache`` attribute proxies the backend's tree."""
+    model, params = reduced_models["qwen3-0.6b"]
+    for cfg in (DENSE, PAGED):
+        eng = ServingEngine(model, params, cfg)
+        assert isinstance(eng.cache_backend, CacheBackend)
+        assert eng.cache is eng.cache_backend.tree
+    assert isinstance(eng.cache_backend, PagedCache)
+
+
+# ---------------------------------------------------------------------------
+# the hoisted bucket table (bugfix regression)
+# ---------------------------------------------------------------------------
+def test_bucket_table_single_definition():
+    """Engine and router must share ONE bucket table — the historic bug
+    was a second hardcoded tuple drifting out of sync."""
+    import repro.serving.router as router_mod
+    assert router_mod._bucket is _bucket
+    assert PROMPT_BUCKETS[0] == 16 and PROMPT_BUCKETS == tuple(
+        sorted(PROMPT_BUCKETS))
+    for n, want in [(1, 16), (16, 16), (17, 32), (512, 512), (513, 1024),
+                    (2048, 2048), (2049, 4096), (5000, 8192)]:
+        assert _bucket(n) == want, (n, want)
+
+
+# ---------------------------------------------------------------------------
+# curated public surface + deprecation shims
+# ---------------------------------------------------------------------------
+def test_public_surface_is_curated():
+    import repro.serving as s
+    assert s.__all__ == ["Router", "Request", "Completion", "ChunkEvent",
+                         "DoneEvent", "ContainerBackend", "EngineConfig",
+                         "CacheBackend"]
+    for name in s.__all__:
+        assert getattr(s, name) is not None
+
+
+def test_legacy_serving_import_warns():
+    import repro.serving as s
+    with pytest.warns(DeprecationWarning, match="repro.serving.pool"):
+        assert s.ContainerServingPool is not None
+    with pytest.raises(AttributeError):
+        s.NoSuchName
+
+
+def test_wave_shim_warns_once(reduced_models):
+    import repro.serving.pool as pool_mod
+    from repro.serving.backend import ThreadBackend
+    from repro.serving.pool import ContainerServingPool
+    model, params = reduced_models["qwen3-0.6b"]
+    backend = ThreadBackend(model, params, 1, config=DENSE)
+    pool = ContainerServingPool(model, params, 1, backend=backend)
+    reqs = _requests(model.cfg, [(4, 1)])
+    old = pool_mod._WAVE_SHIM_WARNED
+    try:
+        pool_mod._WAVE_SHIM_WARNED = False
+        with pytest.warns(DeprecationWarning, match="Router.submit"):
+            pool.serve_timed(reqs)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            pool.serve_timed(reqs)       # second wave: silent
+    finally:
+        pool_mod._WAVE_SHIM_WARNED = old
+
+
+# ---------------------------------------------------------------------------
+# allocator unit behaviour (the non-hypothesis half; properties live in
+# test_block_allocator_props.py)
+# ---------------------------------------------------------------------------
+def test_block_allocator_all_or_nothing():
+    a = BlockAllocator(4)
+    got = a.alloc(3)
+    assert got is not None and len(got) == 3 and a.n_free == 1
+    assert a.alloc(2) is None and a.n_free == 1      # refused, untouched
+    a.free(got)
+    assert a.n_free == 4
+    with pytest.raises(ValueError):
+        a.free(got)                                  # double free
+    with pytest.raises(ValueError):
+        a.free([99])                                 # foreign block

@@ -1,0 +1,135 @@
+"""Paged decode attention: the Pallas block-table kernel (interpret mode)
+and the pure-jnp paged reference, against the dense decode oracle.
+
+The load-bearing property is *bit*-parity of the reference: gathering
+K/V through a block table whose unreserved entries point at garbage
+pages must produce the exact bits of dense decode attention — masked
+lanes contribute an exact ``0.0`` to the flash accumulator (see
+kernels/ref.paged_decode_attention), which is what lets the paged
+serving engine bit-match the dense baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_int8)
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+def _paged_case(key, B, H, Hkv, K, bs, nblk, n_pages, dtype,
+                unique_pages=False):
+    """Random q + page pool + block table + ragged lengths. Unreserved /
+    beyond-length page contents are random garbage by construction."""
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, K)).astype(dtype)
+    k_pages = jax.random.normal(
+        ks[1], (n_pages + 1, bs, Hkv, K)).astype(dtype)
+    v_pages = jax.random.normal(
+        ks[2], (n_pages + 1, bs, Hkv, K)).astype(dtype)
+    if unique_pages:
+        assert n_pages >= B * nblk
+        perm = jax.random.permutation(ks[3], n_pages)[:B * nblk]
+        table = perm.reshape(B, nblk).astype(jnp.int32)
+    else:
+        table = jax.random.randint(ks[3], (B, nblk), 0, n_pages, jnp.int32)
+    lengths = jax.random.randint(ks[4], (B,), 1, bs * nblk + 1, jnp.int32)
+    return q, k_pages, v_pages, table, lengths
+
+
+@pytest.mark.parametrize("B,H,Hkv,K,bs,nblk", [
+    (2, 4, 4, 64, 16, 4),     # MHA
+    (3, 4, 2, 64, 16, 4),     # GQA
+    (2, 8, 2, 32, 8, 6),      # small pages, more groups
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_kernel_matches_ref(B, H, Hkv, K, bs, nblk, dtype):
+    q, kp, vp, table, lengths = _paged_case(
+        jax.random.PRNGKey(0), B, H, Hkv, K, bs, nblk, 32, dtype)
+    got = paged_decode_attention(q, kp, vp, table, lengths, interpret=True)
+    want = ref.paged_decode_attention(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_paged_kernel_softcap():
+    q, kp, vp, table, lengths = _paged_case(
+        jax.random.PRNGKey(1), 2, 4, 2, 64, 16, 4, 32, jnp.float32)
+    got = paged_decode_attention(q, kp, vp, table, lengths, softcap=30.0,
+                                 interpret=True)
+    want = ref.paged_decode_attention(q, kp, vp, table, lengths,
+                                      softcap=30.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_kernel_int8():
+    """int8 pages with per-(token, kv head) absmax scales, dequant inside
+    the kernel grid, vs the paged reference's gather-then-dequant."""
+    key = jax.random.PRNGKey(2)
+    B, H, Hkv, K, bs, nblk, P = 2, 4, 2, 64, 16, 4, 32
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, K), jnp.float32)
+    kf = jax.random.normal(ks[1], (P + 1, bs, Hkv, K), jnp.float32)
+    vf = jax.random.normal(ks[2], (P + 1, bs, Hkv, K), jnp.float32)
+
+    def quant(x):
+        scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+        qx = jnp.round(x / scale[..., None]).astype(jnp.int8)
+        return qx, scale
+    kq, ksc = quant(kf)
+    vq, vsc = quant(vf)
+    table = jax.random.randint(ks[3], (B, nblk), 0, P, jnp.int32)
+    lengths = jax.random.randint(ks[4], (B,), 1, bs * nblk + 1, jnp.int32)
+    got = paged_decode_attention_int8(q, kq, vq, ksc, vsc, table, lengths,
+                                      interpret=True)
+    want = ref.paged_decode_attention(q, kq, vq, table, lengths,
+                                      k_scale_pages=ksc, v_scale_pages=vsc)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_ref_bitwise_matches_dense_gather():
+    """BIT-parity of the reference: scatter a dense K/V into disjoint
+    pages, leave every unreserved page as garbage — the paged path must
+    produce the exact bits of dense decode attention over the gathered
+    context, garbage and all."""
+    key = jax.random.PRNGKey(3)
+    B, H, Hkv, K, bs, nblk, P = 3, 4, 2, 32, 16, 4, 16
+    W = bs * nblk
+    q, kp, vp, table, lengths = _paged_case(
+        key, B, H, Hkv, K, bs, nblk, P, jnp.float32, unique_pages=True)
+    # dense view: the exact tokens the table points at
+    k = kp[table].reshape(B, W, Hkv, K)
+    v = vp[table].reshape(B, W, Hkv, K)
+    valid = jnp.arange(W)[None, :] < lengths[:, None]
+    got = ref.paged_decode_attention(q, kp, vp, table, lengths)
+    want = ref.decode_attention_blocked(q, k, v, valid)
+    assert jnp.array_equal(got, want), "paged reference is not bit-exact"
+
+
+def test_paged_ref_ignores_garbage_pages():
+    """Poisoning every page the tables don't reference (including the
+    scratch page) must not change a single output bit."""
+    key = jax.random.PRNGKey(4)
+    B, H, Hkv, K, bs, nblk, P = 2, 4, 4, 32, 8, 4, 24
+    q, kp, vp, table, lengths = _paged_case(
+        key, B, H, Hkv, K, bs, nblk, P, jnp.float32, unique_pages=True)
+    base = ref.paged_decode_attention(q, kp, vp, table, lengths)
+    used = np.unique(np.asarray(table))
+    poison = np.ones(P + 1, bool)
+    poison[used] = False
+    kp2 = jnp.where(jnp.asarray(poison)[:, None, None, None],
+                    jnp.full_like(kp, 1e9), kp)
+    vp2 = jnp.where(jnp.asarray(poison)[:, None, None, None],
+                    jnp.full_like(vp, -1e9), vp)
+    got = ref.paged_decode_attention(q, kp2, vp2, table, lengths)
+    assert jnp.array_equal(got, base)
