@@ -61,15 +61,26 @@ def _make_backend(args, cfg, model, params, n, units):
     engine_cfg = _engine_config(args)
     if args.isolation == "process":
         return ProcessBackend(cfg, n, total_cores=units, params_seed=0,
-                              config=engine_cfg)
+                              config=engine_cfg,
+                              max_respawns=args.max_respawns)
     if args.submesh:
         return SubmeshBackend(model, params, n,
                               meshes=make_container_meshes(units, n),
                               concurrent=not args.sequential,
-                              config=engine_cfg)
+                              config=engine_cfg,
+                              max_respawns=args.max_respawns)
     return ThreadBackend(model, params, n,
                          concurrent=not args.sequential,
-                         config=engine_cfg)
+                         config=engine_cfg,
+                         max_respawns=args.max_respawns)
+
+
+def _router_fault_kw(args) -> dict:
+    """The Router's fault-tolerance knobs from the serving flags."""
+    return dict(max_retries=args.max_retries,
+                request_deadline_s=args.deadline_s,
+                max_queue=args.max_queue,
+                shed_p95_s=args.shed_p95_s)
 
 
 def _stream_requests(router: Router, requests, verbose_chunks: bool):
@@ -134,6 +145,22 @@ def main() -> None:
     ap.add_argument("--total-cores", type=int, default=None,
                     help="CPU cores to carve among process containers "
                          "(default: all cores this process may use)")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="re-dispatches per request after a container "
+                         "failure before it fails typed")
+    ap.add_argument("--max-respawns", type=int, default=2,
+                    help="automatic container respawns before the "
+                         "circuit breaker leaves it dead")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds, end-to-end "
+                         "across retries; default none)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission bound: shed new requests once this "
+                         "many are in flight (default unbounded)")
+    ap.add_argument("--shed-p95-s", type=float, default=None,
+                    help="shed new requests while the recent "
+                         "time-to-first-chunk p95 exceeds this "
+                         "(seconds; default never)")
     args = ap.parse_args()
     if args.isolation == "process" and args.submesh:
         ap.error("--submesh needs one process owning all devices; pick "
@@ -172,7 +199,7 @@ def main() -> None:
         if args.stream:
             backend = _make_backend(args, cfg, model, params, n, units)
             meshes = getattr(backend, "meshes", None)
-            with Router(backend) as router:
+            with Router(backend, **_router_fault_kw(args)) as router:
                 handles = _stream_requests(router, batch_of_requests(0),
                                            args.print_chunks)
                 # a second pass through the wave shim for the aggregate
@@ -217,7 +244,7 @@ def main() -> None:
             backend_factory=lambda n: _make_backend(args, cfg, model,
                                                     params, n, units),
             feasible_counts=feasible, objective=args.objective,
-            epsilon=0.2, window=args.requests)
+            epsilon=0.2, window=args.requests, **_router_fault_kw(args))
         for wave in range(args.waves):
             _stream_requests(router, batch_of_requests(
                 wave * args.requests), args.print_chunks)
@@ -226,7 +253,10 @@ def main() -> None:
                   f"wall {w.wall_s:.2f}s {w.tokens_per_s:.1f} tok/s "
                   f"energy {w.energy_j:.1f}J "
                   f"ttfc p50 {w.ttfc_p50_s:.3f}s p95 {w.ttfc_p95_s:.3f}s "
-                  f"lat p50 {w.latency_p50_s:.3f}s")
+                  f"lat p50 {w.latency_p50_s:.3f}s"
+                  + (f" retries {w.n_retries} failed {w.n_failed} "
+                     f"shed {w.n_shed}"
+                     if w.n_retries or w.n_failed or w.n_shed else ""))
         print(f"feasible counts: {feasible}")
         print(f"converged choice: n={router.choice}")
         print("scheduler summary:", router.scheduler.summary())

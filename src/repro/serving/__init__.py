@@ -18,10 +18,14 @@ import warnings
 from repro.serving.backend import ContainerBackend
 from repro.serving.cache import CacheBackend
 from repro.serving.engine import Completion, EngineConfig, Request
-from repro.serving.events import ChunkEvent, DoneEvent
-from repro.serving.router import Router
+from repro.serving.events import (ChunkEvent, ContainerFailure, DoneEvent,
+                                  FailedEvent, RejectedEvent, RetryEvent)
+from repro.serving.faults import Fault, FaultPlan
+from repro.serving.router import RequestFailed, RequestRejected, Router
 
 __all__ = ["Router", "Request", "Completion", "ChunkEvent", "DoneEvent",
+           "RetryEvent", "FailedEvent", "RejectedEvent", "ContainerFailure",
+           "RequestFailed", "RequestRejected", "Fault", "FaultPlan",
            "ContainerBackend", "EngineConfig", "CacheBackend"]
 
 # legacy surface: name -> home module. Resolved on attribute access with

@@ -51,6 +51,7 @@ import multiprocessing as mp
 import os
 import threading
 import time
+import traceback
 from collections import deque
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
@@ -59,7 +60,9 @@ import numpy as np
 from repro.core.testbed import assign_core_sets, spawn_pinned
 from repro.serving.engine import (Completion, EngineConfig, Request,
                                   ServingEngine)
-from repro.serving.events import DoneEvent, Event
+from repro.serving.events import (ContainerFailure, DoneEvent, Event,
+                                  FailedEvent)
+from repro.serving.faults import FaultInjector, FaultPlan, describe_exitcode
 
 _READY_POLL_S = 0.25
 _IDLE_POLL_S = 0.05
@@ -67,7 +70,18 @@ _IDLE_POLL_S = 0.05
 
 @runtime_checkable
 class ContainerBackend(Protocol):
-    """The request-level serving protocol (see module docstring)."""
+    """The request-level serving protocol (see module docstring).
+
+    Supervising backends additionally expose an *optional* fault-
+    tolerance surface the Router discovers with ``getattr`` (so minimal
+    structural backends — test substrates — keep satisfying the
+    protocol): ``alive(cid) -> bool`` (dispatchable right now — dead and
+    respawning containers are excluded), ``cancel(cid, rid)`` (remove a
+    request wherever it is and free its cache reservation), and a
+    ``failures`` list of every ``ContainerFailure`` surfaced so far.
+    ``poll()`` may interleave ``ContainerFailure`` records with the
+    request events — it must NOT raise for a container-scoped failure,
+    only for backend-wide invariant violations."""
 
     capacity: int
 
@@ -109,7 +123,17 @@ class ThreadBackend:
     active engines one macro-step each — in worker threads when more than
     one container has work, so streaming overlaps the same way waves do —
     and ``drain`` runs each engine's ``run()`` to idle (thread-per-
-    container, the PR 1 wave machinery verbatim)."""
+    container, the PR 1 wave machinery verbatim).
+
+    Supervision: an engine whose ``step()`` raises is *failed*, not
+    propagated — ``poll()`` appends a ``ContainerFailure`` (kind
+    ``"error"``, with the in-flight rids) to the event stream and, while
+    the respawn budget lasts, rebuilds the engine in place from the kept
+    model/params (incarnation bumped, so a ``FaultPlan`` scoped to
+    incarnation 0 does not re-fire). After ``max_respawns`` rebuilds the
+    circuit breaker trips: the container stays dead, ``alive()`` is
+    False, and submits to it raise. ``drain`` keeps the wave contract
+    (raise on any failure) — waves have no per-request recovery path."""
 
     kind = "thread"
 
@@ -118,40 +142,110 @@ class ThreadBackend:
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  meshes: Sequence[Any] | None = None,
                  concurrent: bool = True,
-                 config: EngineConfig | None = None):
+                 config: EngineConfig | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 max_respawns: int = 2):
         if meshes is not None:
             validate_disjoint_meshes(meshes, n_containers)
         self.capacity = n_containers
+        self.model = model
+        self.params = params
         self.meshes = meshes
         self.concurrent = concurrent
         self.config = config or EngineConfig(
             n_slots=n_slots_per_container, max_len=max_len)
+        self.fault_plan = fault_plan
+        self.max_respawns = max_respawns
+        self._engine_factory = engine_factory
         self._events: deque[Event] = deque()   # append is GIL-atomic
         self._executor = None                  # lazy; poll-step overlap
-        self.engines: list[ServingEngine] = []
-        for cid in range(n_containers):
-            mesh_kw = {"mesh": meshes[cid]} if meshes is not None else {}
-            if engine_factory is None:
-                eng = ServingEngine(model, params, self.config, **mesh_kw)
-            else:
-                # custom factories (tests, instrumented engines) keep the
-                # legacy call style; their forwarding path warns once
-                eng = engine_factory(model, params,
-                                     n_slots=self.config.n_slots,
-                                     max_len=self.config.max_len, **mesh_kw)
-            eng.container_id = cid
-            eng.on_event = self._events.append
-            self.engines.append(eng)
+        self.failures: list[ContainerFailure] = []
+        self._alive = [True] * n_containers
+        self._respawns = [0] * n_containers
+        self._incarnation = [0] * n_containers
+        # dead engines leave cumulative busy/tokens behind; the rebuilt
+        # engine restarts at zero, so stats() adds the pre-failure base
+        # or window deltas would go negative across a respawn
+        self._stats_base = [(0.0, 0)] * n_containers
+        self.engines: list[ServingEngine] = [
+            self._build_engine(cid, 0) for cid in range(n_containers)]
+
+    def _build_engine(self, cid: int, incarnation: int) -> ServingEngine:
+        mesh_kw = ({"mesh": self.meshes[cid]}
+                   if self.meshes is not None else {})
+        if self._engine_factory is None:
+            eng = ServingEngine(self.model, self.params, self.config,
+                                **mesh_kw)
+        else:
+            # custom factories (tests, instrumented engines) keep the
+            # legacy call style; their forwarding path warns once
+            eng = self._engine_factory(self.model, self.params,
+                                       n_slots=self.config.n_slots,
+                                       max_len=self.config.max_len,
+                                       **mesh_kw)
+        eng.container_id = cid
+        eng.on_event = self._events.append
+        if self.fault_plan is not None:
+            inj = FaultInjector(self.fault_plan, cid, incarnation)
+            eng.fault = inj if inj.armed else None
+        return eng
+
+    def _fail_container(self, cid: int, exc: BaseException) -> None:
+        """Convert an engine-step exception into a ContainerFailure event
+        and either rebuild the engine (bounded) or trip the breaker."""
+        eng = self.engines[cid]
+        lost = tuple(r.rid for r in eng.queue) + tuple(
+            s.rid for s in eng.slots if s.active)
+        tb = "".join(traceback.format_exception(
+            type(exc), exc, exc.__traceback__))
+        fail = ContainerFailure(
+            container_id=cid, kind="error",
+            message=f"engine step raised:\n{tb}",
+            time_s=time.perf_counter(), lost_rids=lost)
+        self.failures.append(fail)
+        self._events.append(fail)
+        base_b, base_t = self._stats_base[cid]
+        self._stats_base[cid] = (base_b + eng.busy_s,
+                                 base_t + eng.tokens_generated)
+        if self._respawns[cid] < self.max_respawns:
+            self._respawns[cid] += 1
+            self._incarnation[cid] += 1
+            # in-process "respawn": a fresh engine over the same (kept)
+            # model/params — jit caches are shared process-wide, so this
+            # is cheap and immediately serving
+            self.engines[cid] = self._build_engine(
+                cid, self._incarnation[cid])
+        else:
+            self._alive[cid] = False
+
+    # -- supervision surface -------------------------------------------
+    def alive(self, cid: int) -> bool:
+        return self._alive[cid]
+
+    def cancel(self, cid: int, rid: int) -> None:
+        """Remove ``rid`` from container ``cid`` wherever it is (queued
+        or mid-decode) and free its cache reservation. No event is
+        emitted — the canceller owns the terminal event."""
+        if self._alive[cid]:
+            self.engines[cid].cancel(rid)
 
     # -- streaming ------------------------------------------------------
     def submit(self, cid: int, req: Request) -> None:
+        if not self._alive[cid]:
+            raise RuntimeError(f"container {cid} is circuit-broken "
+                               f"(after {self._respawns[cid]} respawns)")
         self.engines[cid].submit(req)
 
     def submit_many(self, cid: int, reqs: Sequence[Request]) -> None:
+        if not self._alive[cid]:
+            raise RuntimeError(f"container {cid} is circuit-broken "
+                               f"(after {self._respawns[cid]} respawns)")
         self.engines[cid].submit_many(reqs)
 
     def poll(self) -> list[Event]:
-        active = [e for e in self.engines if e.has_work]
+        active = [eng for cid, eng in enumerate(self.engines)
+                  if self._alive[cid] and eng.has_work]
+        failed: list[tuple[int, BaseException]] = []
         if self.concurrent and len(active) > 1:
             if self._executor is None:
                 # persistent workers: a stream polls once per macro-step
@@ -160,18 +254,21 @@ class ThreadBackend:
                 self._executor = ThreadPoolExecutor(
                     max_workers=self.capacity,
                     thread_name_prefix="container-step")
-            futures = [self._executor.submit(e.step) for e in active]
-            errs = []
-            for f in futures:           # join ALL steps before raising —
+            futures = [(eng, self._executor.submit(eng.step))
+                       for eng in active]
+            for eng, f in futures:      # join ALL steps before failing —
                 try:                    # a swallowed error would hang the
                     f.result()          # stream waiting for a DoneEvent
                 except BaseException as e:
-                    errs.append(e)
-            if errs:
-                raise errs[0]
+                    failed.append((eng.container_id, e))
         else:
             for eng in active:
-                eng.step()
+                try:
+                    eng.step()
+                except BaseException as e:
+                    failed.append((eng.container_id, e))
+        for cid, exc in failed:
+            self._fail_container(cid, exc)
         for eng in self.engines:
             # poll-driven consumers take completions from DoneEvents;
             # nobody calls run() on a streamed engine, so drain its done
@@ -191,7 +288,8 @@ class ThreadBackend:
 
     def stats(self, cid: int) -> tuple[float, int]:
         eng = self.engines[cid]
-        return eng.busy_s, eng.tokens_generated
+        base_b, base_t = self._stats_base[cid]
+        return base_b + eng.busy_s, base_t + eng.tokens_generated
 
     # -- wave shim ------------------------------------------------------
     def drain(self, concurrent: bool | None = None
@@ -199,7 +297,14 @@ class ThreadBackend:
         """Run every container to idle; per-container results for
         ``assemble_wave``. Wave consumers take completions, not events,
         so the event buffer is cleared afterwards (``engine.run`` emitted
-        into it redundantly)."""
+        into it redundantly). Waves have no per-request recovery path, so
+        a circuit-broken container fails the whole wave here."""
+        dead = [cid for cid in range(self.capacity)
+                if not self._alive[cid]]
+        if dead:
+            raise RuntimeError(
+                f"cannot drain a wave: containers {dead} are "
+                "circuit-broken (see backend.failures)")
         if concurrent is None:
             concurrent = self.concurrent
         out: list[Any] = [None] * self.capacity
@@ -255,7 +360,9 @@ class SubmeshBackend(ThreadBackend):
                  engine_factory: Callable[..., ServingEngine] | None = None,
                  meshes: Sequence[Any] | None = None,
                  concurrent: bool = True,
-                 config: EngineConfig | None = None):
+                 config: EngineConfig | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 max_respawns: int = 2):
         if meshes is None:
             raise ValueError("SubmeshBackend needs per-container meshes "
                              "(launch/mesh.make_container_meshes)")
@@ -263,7 +370,8 @@ class SubmeshBackend(ThreadBackend):
                          n_slots_per_container=n_slots_per_container,
                          max_len=max_len, engine_factory=engine_factory,
                          meshes=meshes, concurrent=concurrent,
-                         config=config)
+                         config=config, fault_plan=fault_plan,
+                         max_respawns=max_respawns)
 
 
 # ---------------------------------------------------------------------------
@@ -401,19 +509,43 @@ def _engine_config_wire(config: EngineConfig) -> dict:
 
 def _serving_child(conn, cid: int, cfg, params_seed: int,
                    params_path: str | None, params_shm,
-                   engine_kw: dict) -> None:
+                   engine_kw: dict, incarnation: int = 0,
+                   fault_plan=None, heartbeat_s: float = 0.0) -> None:
     """Container body (module-level: spawn pickles it by reference).
     Affinity was already applied by ``spawn_pinned``; the jax import below
     therefore sizes XLA's threadpool from the container's cpuset.
     ``engine_kw`` is ``_engine_config_wire`` output — one EngineConfig,
     primitives only.
 
-    Streaming protocol: ``("submit", [Request...])`` enqueues;
+    Streaming protocol: ``("submit", [Request...])`` enqueues,
+    ``("cancel", rid)`` removes one request (queued or mid-decode);
     after every engine macro-step (and after zero-budget submissions,
     which complete instantly) the child flushes ``("events", [Event...],
-    busy_s, tokens_generated)``. The pipe is checked between steps, so a
-    ``("close",)`` lands promptly even mid-stream."""
+    busy_s, tokens_generated)``. With ``heartbeat_s`` a daemon thread
+    also sends ``("hb",)`` on that period, so the parent can tell a slow
+    child (heartbeats flowing, no events) from a hung one (silence). The
+    pipe is checked between steps, so a ``("close",)`` lands promptly
+    even mid-stream.
+
+    Exits are classified (EXIT_* in serving/faults.py) so the parent's
+    ``ContainerFailure`` message can say *why* from the exitcode alone:
+    startup failures, a lost reply pipe and engine-step errors each get
+    a distinct nonzero code instead of the silent exit-0 they used to
+    share with clean shutdown."""
+    import sys
     import traceback
+
+    from repro.serving.faults import (EXIT_FAULT_KILL, EXIT_PIPE_LOST,
+                                      EXIT_STARTUP, EXIT_STEP_ERROR,
+                                      FaultInjector, InjectedFault)
+    send_lock = threading.Lock()
+
+    def send(msg) -> None:
+        # the heartbeat thread and the serve loop share the pipe; Linux
+        # pipe writes interleave at message granularity only under a lock
+        with send_lock:
+            conn.send(msg)
+
     try:
         import jax
 
@@ -431,26 +563,50 @@ def _serving_child(conn, cid: int, cfg, params_seed: int,
         # events cross the pipe as-is: the child must stamp the parent's
         # container id or every child would claim container 0
         engine.container_id = cid
+        inj = FaultInjector(fault_plan, cid, incarnation)
+        engine.fault = inj if inj.armed else None
         buf: list = []
         engine.on_event = buf.append
         try:
             cores = sorted(os.sched_getaffinity(0))
         except AttributeError:              # non-Linux dev host
             cores = []
-        conn.send(("ready", cores))
+        send(("ready", cores))
     except BaseException:
-        conn.send(("error", traceback.format_exc()))
-        return
+        try:
+            send(("error", traceback.format_exc()))
+        except Exception:
+            pass
+        sys.exit(EXIT_STARTUP)
+    if heartbeat_s > 0:
+        hb_stop = threading.Event()
+
+        def _heartbeat() -> None:
+            while not hb_stop.wait(heartbeat_s):
+                try:
+                    send(("hb",))
+                except Exception:
+                    return              # pipe gone: main loop exits too
+
+        threading.Thread(target=_heartbeat, daemon=True,
+                         name=f"hb-{cid}").start()
     while True:
         try:
             if buf:
-                conn.send(("events", list(buf), engine.busy_s,
-                           engine.tokens_generated))
-                buf.clear()
-                # DoneEvents carry the completions; nobody calls run()
-                # here, so drain the engine's done list or it grows
-                # without bound across a long-lived stream
-                engine.done.clear()
+                if inj.armed and inj.drop_reply():
+                    buf.clear()         # injected reply loss
+                    engine.done.clear()
+                else:
+                    delay = inj.reply_delay() if inj.armed else 0.0
+                    if delay > 0:
+                        time.sleep(delay)
+                    send(("events", list(buf), engine.busy_s,
+                          engine.tokens_generated))
+                    buf.clear()
+                    # DoneEvents carry the completions; nobody calls
+                    # run() here, so drain the engine's done list or it
+                    # grows without bound across a long-lived stream
+                    engine.done.clear()
             timeout = 0 if engine.has_work else _IDLE_POLL_S
             if conn.poll(timeout):
                 msg = conn.recv()
@@ -460,15 +616,32 @@ def _serving_child(conn, cid: int, cfg, params_seed: int,
                 if msg[0] == "submit":
                     engine.submit_many(msg[1])
                     continue               # flush instant completions
+                if msg[0] == "cancel":
+                    engine.cancel(msg[1])
+                    continue
             if engine.has_work:
                 engine.step()
-        except (EOFError, BrokenPipeError):  # parent died / closed: exit
-            return
-        except BaseException:
+        except InjectedFault as e:
+            if e.fault.kind == "kill":
+                os._exit(EXIT_FAULT_KILL)  # a real crash: no cleanup
             try:
-                conn.send(("error", traceback.format_exc()))
+                send(("error", traceback.format_exc()))
+            except Exception:
+                pass
+            sys.exit(EXIT_STEP_ERROR)
+        except (EOFError, BrokenPipeError):  # parent died / closed
+            sys.exit(EXIT_PIPE_LOST)
+        except SystemExit:
+            raise
+        except BaseException:
+            # engine state after an arbitrary step error is not
+            # trustworthy — report and exit so the parent respawns a
+            # clean incarnation (the old loop kept serving on it)
+            try:
+                send(("error", traceback.format_exc()))
             except (BrokenPipeError, OSError):
-                return
+                sys.exit(EXIT_PIPE_LOST)
+            sys.exit(EXIT_STEP_ERROR)
 
 
 class ProcessBackend:
@@ -477,7 +650,22 @@ class ProcessBackend:
     spawn lazily at first submit and stay warm until ``close()`` —
     engines, compiled executables and params survive across waves and
     streams, which is what makes process isolation affordable inside an
-    online loop."""
+    online loop.
+
+    Supervision: a child that dies (exitcode decoded via
+    ``serving.faults.describe_exitcode``), reports a step error, or goes
+    silent past the heartbeat timeout is *failed*, not raised — ``poll``
+    surfaces a ``ContainerFailure`` carrying its in-flight rids, and
+    while the respawn budget lasts a replacement child is launched
+    *non-blocking* (exponential backoff; the pending handshake is
+    promoted from later ``poll`` calls, so healthy containers keep
+    serving through a respawn's jax import + warmup). The params handoff
+    re-runs through the same path as the original spawn, so keep the
+    ``.npz`` file / shared-memory segment alive while the backend is.
+    After ``max_respawns`` replacements a container's circuit breaker
+    trips: ``alive()`` stays False and the Router routes around it.
+    ``drain`` keeps the wave contract — any failure tears down the wave
+    with an exception, since waves have no per-request recovery."""
 
     kind = "process"
 
@@ -490,7 +678,12 @@ class ProcessBackend:
                  chunked: bool = True, chunk_tokens: int | None = None,
                  allow_shared_cores: bool = False,
                  start_timeout_s: float = 600.0,
-                 config: EngineConfig | None = None):
+                 config: EngineConfig | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 max_respawns: int = 2,
+                 respawn_backoff_s: float = 0.25,
+                 heartbeat_s: float = 0.5,
+                 heartbeat_timeout_s: float | None = 60.0):
         self.cfg = cfg
         self.capacity = n_containers
         self.config = config or EngineConfig(
@@ -509,16 +702,38 @@ class ProcessBackend:
         if params_path and params_shm:
             raise ValueError("pass params_path or params_shm, not both")
         self.start_timeout_s = start_timeout_s
+        self.fault_plan = fault_plan
+        self.max_respawns = max_respawns
+        self.respawn_backoff_s = respawn_backoff_s
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = (
+            heartbeat_timeout_s if heartbeat_s > 0 else None)
         # fail fast, before any spawn: more containers than cores cannot
         # be disjoint (see core/testbed.assign_core_sets)
         self.core_sets = assign_core_sets(n_containers,
                                          total_cores=total_cores,
                                          allow_shared=allow_shared_cores)
         self.reported_core_sets: list[frozenset[int]] | None = None
-        self.workers: list[tuple[Any, Any]] | None = None
+        # workers[cid] is (proc, conn) while serving, None while dead or
+        # respawning (the pending handshake lives in _spawning[cid])
+        self.workers: list[tuple[Any, Any] | None] | None = None
         self._events: deque[Event] = deque()
-        self._stats = [(0.0, 0)] * n_containers
-        self._outstanding = [0] * n_containers
+        self.failures: list[ContainerFailure] = []
+        # rid-sets, not counts: a lost container must say WHICH requests
+        # died with it, and cancel() must be race-safe against a
+        # completion already in the pipe
+        self._inflight: list[set[int]] = [set() for _ in range(n_containers)]
+        self._alive = [True] * n_containers
+        self._respawns = [0] * n_containers
+        self._incarnation = [0] * n_containers
+        self._backoff = [respawn_backoff_s] * n_containers
+        self._next_spawn = [0.0] * n_containers
+        self._spawning: list[tuple[Any, Any] | None] = [None] * n_containers
+        self._last_msg = [0.0] * n_containers
+        # child counters restart at zero each incarnation; stats() adds
+        # the accumulated pre-failure base so window deltas stay monotone
+        self._stats_child = [(0.0, 0)] * n_containers
+        self._stats_base = [(0.0, 0)] * n_containers
 
     # -- lifecycle ------------------------------------------------------
     def warm(self) -> None:
@@ -527,20 +742,23 @@ class ProcessBackend:
         cost outside its timed region."""
         self._ensure_workers()
 
+    def _spawn_one(self, cid: int, incarnation: int) -> tuple[Any, Any]:
+        ctx = mp.get_context("spawn")
+        return spawn_pinned(
+            _serving_child, self.core_sets[cid],
+            args=(cid, self.cfg, self.params_seed, self.params_path,
+                  self.params_shm, _engine_config_wire(self.config),
+                  incarnation, self.fault_plan, self.heartbeat_s),
+            ctx=ctx)
+
     def _ensure_workers(self) -> None:
         """Spawn + handshake all children once; engines stay warm across
-        waves (the per-count pool caches rely on this)."""
+        waves (the per-count pool caches rely on this). The INITIAL spawn
+        stays fail-fast (blocking handshake, raise on any startup error)
+        — supervision begins once a container has served."""
         if self.workers is not None:
             return
-        ctx = mp.get_context("spawn")
-        workers = []
-        for cid, cores in enumerate(self.core_sets):
-            proc, conn = spawn_pinned(
-                _serving_child, cores,
-                args=(cid, self.cfg, self.params_seed, self.params_path,
-                      self.params_shm, _engine_config_wire(self.config)),
-                ctx=ctx)
-            workers.append((proc, conn))
+        workers = [self._spawn_one(cid, 0) for cid in range(self.capacity)]
         reported = []
         try:
             for cid, (proc, conn) in enumerate(workers):
@@ -553,8 +771,11 @@ class ProcessBackend:
             for proc, _ in workers:
                 proc.terminate()
             raise
-        self.workers = workers
+        self.workers = list(workers)
         self.reported_core_sets = reported
+        now = time.perf_counter()
+        self._alive = [True] * self.capacity
+        self._last_msg = [now] * self.capacity
 
     @staticmethod
     def _recv(proc, conn, timeout_s: float | None):
@@ -571,26 +792,48 @@ class ProcessBackend:
         return conn.recv()
 
     def close(self) -> None:
-        """Shut the warm children down (idempotent). Cached backends
+        """Shut the warm children down (idempotent), including any
+        respawn still mid-handshake — nothing may orphan. Cached backends
         evicted by adaptive facades call this so children never leak."""
         if self.workers is None:
             return
         workers, self.workers = self.workers, None
+        spawning, self._spawning = (self._spawning,
+                                    [None] * self.capacity)
         self._events.clear()
-        self._outstanding = [0] * self.capacity
-        # respawned children restart their counters at zero — stale
-        # cumulatives would make the next wave's deltas negative
-        self._stats = [(0.0, 0)] * self.capacity
-        for _, conn in workers:
+        self._inflight = [set() for _ in range(self.capacity)]
+        # reopened (lazily respawned) children restart their counters at
+        # zero — stale cumulatives would make the next wave's deltas
+        # negative
+        self._stats_child = [(0.0, 0)] * self.capacity
+        self._stats_base = [(0.0, 0)] * self.capacity
+        self._alive = [True] * self.capacity
+        self._respawns = [0] * self.capacity
+        self._incarnation = [0] * self.capacity
+        self._backoff = [self.respawn_backoff_s] * self.capacity
+        self._next_spawn = [0.0] * self.capacity
+        for w in workers:
+            if w is None:
+                continue
             try:
-                conn.send(("close",))
+                w[1].send(("close",))
             except (BrokenPipeError, OSError):
                 pass
-        for proc, conn in workers:
+        for w in workers:
+            if w is None:
+                continue
+            proc, conn = w
             proc.join(timeout=10)
             if proc.is_alive():
                 proc.terminate()
                 proc.join(timeout=5)
+            conn.close()
+        for sp in spawning:
+            if sp is None:
+                continue
+            proc, conn = sp
+            proc.terminate()
+            proc.join(timeout=5)
             conn.close()
 
     def __del__(self):
@@ -598,6 +841,122 @@ class ProcessBackend:
             self.close()
         except Exception:
             pass
+
+    # -- supervision ----------------------------------------------------
+    def alive(self, cid: int) -> bool:
+        """Dispatchable right now. True before first spawn (children are
+        lazy); False while dead, respawning, or circuit-broken."""
+        return self._alive[cid]
+
+    def cancel(self, cid: int, rid: int) -> None:
+        """Forget ``rid`` parent-side and ask the child to drop it. Safe
+        against the race where its DoneEvent is already in the pipe: the
+        rid is discarded (not asserted present), the child's cancel of a
+        finished request is a no-op, and the stale DoneEvent is still
+        delivered (the canceller's event routing must tolerate it)."""
+        self._inflight[cid].discard(rid)
+        w = self.workers[cid] if self.workers is not None else None
+        if w is not None and self._alive[cid]:
+            try:
+                w[1].send(("cancel", rid))
+            except (BrokenPipeError, OSError):
+                pass                    # death is _pump's to notice
+
+    def _fail(self, cid: int, kind: str, message: str,
+              exitcode: int | None = None) -> None:
+        """Record one container failure: emit the typed event (with the
+        lost rids), fold the dead incarnation's counters into the stats
+        base, reap the child, and schedule a bounded respawn."""
+        now = time.perf_counter()
+        lost = tuple(sorted(self._inflight[cid]))
+        self._inflight[cid] = set()
+        base_b, base_t = self._stats_base[cid]
+        child_b, child_t = self._stats_child[cid]
+        self._stats_base[cid] = (base_b + child_b, base_t + child_t)
+        self._stats_child[cid] = (0.0, 0)
+        fail = ContainerFailure(
+            container_id=cid, kind=kind,
+            message=f"container {cid} {kind}: {message}",
+            time_s=now, exitcode=exitcode, lost_rids=lost)
+        self.failures.append(fail)
+        self._events.append(fail)
+        self._alive[cid] = False
+        w = self.workers[cid] if self.workers is not None else None
+        if w is not None:
+            proc, conn = w
+            self.workers[cid] = None
+            try:
+                conn.close()
+            except OSError:
+                pass
+            if proc.is_alive():
+                proc.terminate()
+            proc.join(timeout=5)
+        if self._respawns[cid] < self.max_respawns:
+            self._next_spawn[cid] = now + self._backoff[cid]
+            self._backoff[cid] = min(self._backoff[cid] * 2, 30.0)
+
+    def _record_start_failure(self, cid: int, detail: str,
+                              exitcode: int | None) -> None:
+        now = time.perf_counter()
+        fail = ContainerFailure(
+            container_id=cid, kind="start",
+            message=f"container {cid} respawn failed to start: {detail}",
+            time_s=now, exitcode=exitcode, lost_rids=())
+        self.failures.append(fail)
+        self._events.append(fail)
+        self._next_spawn[cid] = now + self._backoff[cid]
+        self._backoff[cid] = min(self._backoff[cid] * 2, 30.0)
+
+    def _service_respawns(self) -> None:
+        """Non-blocking respawn driver, run on every pump: launch
+        replacements whose backoff expired, promote pending handshakes
+        that completed — healthy containers never wait on a respawning
+        one's jax import + engine build."""
+        if self.workers is None:
+            return
+        now = time.perf_counter()
+        for cid in range(self.capacity):
+            if self._alive[cid]:
+                continue
+            sp = self._spawning[cid]
+            if sp is not None:
+                proc, conn = sp
+                msg = None
+                try:
+                    if conn.poll(0):
+                        msg = conn.recv()
+                except (EOFError, OSError):
+                    msg = ("error", "handshake pipe closed")
+                if msg is not None and msg[0] == "ready":
+                    self._spawning[cid] = None
+                    self.workers[cid] = (proc, conn)
+                    if self.reported_core_sets is not None:
+                        self.reported_core_sets[cid] = frozenset(msg[1])
+                    self._alive[cid] = True
+                    self._last_msg[cid] = now
+                    self._backoff[cid] = self.respawn_backoff_s
+                elif msg is not None or not proc.is_alive():
+                    self._spawning[cid] = None
+                    detail = (msg[1] if msg is not None
+                              else describe_exitcode(proc.exitcode))
+                    exitcode = proc.exitcode
+                    if proc.is_alive():
+                        proc.terminate()
+                    proc.join(timeout=5)
+                    try:
+                        conn.close()
+                    except OSError:
+                        pass
+                    self._record_start_failure(cid, detail, exitcode)
+                continue
+            if (self._respawns[cid] >= self.max_respawns
+                    or now < self._next_spawn[cid]):
+                continue                # circuit-broken, or backing off
+            self._respawns[cid] += 1
+            self._incarnation[cid] += 1
+            self._spawning[cid] = self._spawn_one(
+                cid, self._incarnation[cid])
 
     # -- streaming ------------------------------------------------------
     def submit(self, cid: int, req: Request) -> None:
@@ -608,48 +967,90 @@ class ProcessBackend:
             return
         self._ensure_workers()
         assert self.workers is not None
+        if not self._alive[cid]:
+            raise RuntimeError(
+                f"container {cid} is not serving (dead, respawning or "
+                "circuit-broken — check alive() before dispatch)")
+        # inflight BEFORE send: if the pipe breaks mid-send the rids ride
+        # the ContainerFailure's lost_rids and the Router's normal retry
+        # path recovers them — no separate submit-error path
+        self._inflight[cid].update(r.rid for r in reqs)
         _, conn = self.workers[cid]
-        conn.send(("submit", list(reqs)))
-        self._outstanding[cid] += len(reqs)
+        try:
+            conn.send(("submit", list(reqs)))
+        except (BrokenPipeError, OSError) as e:
+            self._fail(cid, "dead", f"submit pipe broke: {e}")
+
+    def _route_ready(self, cid: int, conn) -> bool:
+        """Drain every buffered message from one serving child. Never
+        raises: a closed pipe just ends the drain (death is the liveness
+        scan's to classify, with the exitcode in hand)."""
+        got = False
+        while True:
+            try:
+                if not conn.poll(0):
+                    return got
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return got
+            got = True
+            self._last_msg[cid] = time.perf_counter()
+            if msg[0] == "hb":
+                continue
+            if msg[0] == "error":
+                self._fail(cid, "error",
+                           f"engine step raised:\n{msg[1]}",
+                           exitcode=None)
+                return got
+            _, events, busy, toks = msg
+            self._stats_child[cid] = (busy, toks)
+            for ev in events:
+                if isinstance(ev, (DoneEvent, FailedEvent)):
+                    self._inflight[cid].discard(ev.rid)
+                self._events.append(ev)
 
     def _pump(self, block_s: float = 0.0) -> bool:
         """Drain every ready child message into the event buffer; with
-        ``block_s`` wait up to that long for the first one. Raises (after
-        tearing the workers down — their pipes hold replies for a wave
-        that no longer exists) on a child error or death."""
+        ``block_s`` wait up to that long for the first one. Container
+        failures (death, step error, heartbeat silence) become
+        ``ContainerFailure`` events in the buffer — never exceptions —
+        and replacements are serviced, all without blocking healthy
+        containers."""
         if self.workers is None:
             return False
-        from multiprocessing.connection import wait as conn_wait
-        conns = [conn for _, conn in self.workers]
+        self._service_respawns()
+        conn_map = {w[1]: cid for cid, w in enumerate(self.workers)
+                    if w is not None and self._alive[cid]}
+        if conn_map and block_s > 0:
+            from multiprocessing.connection import wait as conn_wait
+            conn_wait(list(conn_map), block_s)
         got = False
-        try:
-            ready = conn_wait(conns, block_s)
-            for conn in ready:
-                cid = conns.index(conn)
-                while conn.poll(0):
-                    msg = conn.recv()
-                    got = True
-                    if msg[0] == "error":
-                        raise RuntimeError(
-                            f"container {cid} failed mid-serve:\n{msg[1]}")
-                    _, events, busy, toks = msg
-                    self._stats[cid] = (busy, toks)
-                    for ev in events:
-                        if isinstance(ev, DoneEvent):
-                            self._outstanding[cid] -= 1
-                        self._events.append(ev)
-            if not got:
-                for cid, (proc, _) in enumerate(self.workers):
-                    if self._outstanding[cid] and not proc.is_alive():
-                        raise RuntimeError(
-                            f"container {cid} died (exit {proc.exitcode}) "
-                            f"with {self._outstanding[cid]} requests in "
-                            "flight")
-        except EOFError as e:
-            raise RuntimeError("container closed its pipe mid-serve") from e
-        except BaseException:
-            self.close()
-            raise
+        for conn, cid in list(conn_map.items()):
+            got |= self._route_ready(cid, conn)
+        now = time.perf_counter()
+        for cid in range(self.capacity):
+            w = self.workers[cid]
+            if w is None or not self._alive[cid]:
+                continue
+            proc, conn = w
+            if not proc.is_alive():
+                # the child may have flushed replies (even its "error"
+                # report) right before dying — consume them first so no
+                # completed request is counted lost
+                self._route_ready(cid, conn)
+                if self._alive[cid]:
+                    self._fail(
+                        cid, "dead",
+                        "child process exited mid-serve "
+                        f"({describe_exitcode(proc.exitcode)}) with "
+                        f"{len(self._inflight[cid])} requests in flight",
+                        exitcode=proc.exitcode)
+            elif (self.heartbeat_timeout_s is not None
+                  and now - self._last_msg[cid] > self.heartbeat_timeout_s):
+                self._fail(
+                    cid, "hung",
+                    f"no message for {now - self._last_msg[cid]:.1f}s "
+                    f"(heartbeat timeout {self.heartbeat_timeout_s:g}s)")
         return got
 
     def poll(self) -> list[Event]:
@@ -659,14 +1060,16 @@ class ProcessBackend:
         return out
 
     def load(self, cid: int) -> int:
-        return self._outstanding[cid]
+        return len(self._inflight[cid])
 
     def stats(self, cid: int) -> tuple[float, int]:
-        return self._stats[cid]
+        base_b, base_t = self._stats_base[cid]
+        child_b, child_t = self._stats_child[cid]
+        return base_b + child_b, base_t + child_t
 
     @property
     def outstanding(self) -> int:
-        return sum(self._outstanding)
+        return sum(len(s) for s in self._inflight)
 
     # -- wave shim ------------------------------------------------------
     def drain(self, concurrent: bool | None = None
@@ -676,9 +1079,16 @@ class ProcessBackend:
         protocol compatibility and ignored — processes always overlap
         (that is the point of this backend). Wall/busy/token deltas are
         measured from the buffered stats at call entry, so a warm backend
-        reports per-wave numbers, not lifetime cumulatives."""
+        reports per-wave numbers, not lifetime cumulatives.
+
+        Waves have no per-request recovery: any ``ContainerFailure``
+        surfaced while draining tears the wave down with an exception
+        (children closed — their pipes hold replies for a wave that no
+        longer exists) instead of hanging on requests that died with
+        their container."""
         del concurrent
-        stats0 = list(self._stats)
+        n_fail0 = len(self.failures)
+        stats0 = [self.stats(cid) for cid in range(self.capacity)]
         t0 = time.perf_counter()
         comps: list[list[Completion]] = [[] for _ in range(self.capacity)]
         last = [t0] * self.capacity
@@ -691,12 +1101,16 @@ class ProcessBackend:
                 if isinstance(ev, DoneEvent):
                     comps[ev.container_id].append(ev.completion)
                     last[ev.container_id] = time.perf_counter()
+            if len(self.failures) > n_fail0:
+                fail = self.failures[-1]
+                self.close()
+                raise RuntimeError(f"wave failed: {fail.message}")
             if self.outstanding <= 0:
                 break
             self._pump(block_s=_IDLE_POLL_S)
             pending = list(self._events)
             self._events.clear()
         return [(comps[cid], last[cid] - t0,
-                 self._stats[cid][0] - stats0[cid][0],
-                 self._stats[cid][1] - stats0[cid][1])
+                 self.stats(cid)[0] - stats0[cid][0],
+                 self.stats(cid)[1] - stats0[cid][1])
                 for cid in range(self.capacity)]

@@ -195,6 +195,14 @@ class PagedCache:
         self._has_paged = _tree_has_paged_group(tree)
 
     # -- accounting ----------------------------------------------------
+    @property
+    def n_live_blocks(self) -> int:
+        """Blocks currently reserved by rows (pending-free rows included
+        until ``flush`` returns theirs to the allocator). At every point
+        ``allocator.n_free + n_live_blocks == max_blocks`` — the exact
+        conservation the chaos/cancellation tests assert."""
+        return sum(len(b) for b in self._blocks)
+
     def _cap(self, n_tokens: int) -> int:
         return min(n_tokens, self.max_len)
 
@@ -231,7 +239,11 @@ class PagedCache:
         return True
 
     def free(self, row: int) -> None:
-        if not self._blocks[row]:
+        # idempotent: cancel/expire and completion may race to release
+        # the same row (deadline expiry in the Router vs the engine
+        # finishing the slot) — freeing an already-pending row twice
+        # would double-free its blocks at the next flush
+        if not self._blocks[row] or row in self._pending:
             return
         # deferred: the device table row must be scrubbed to scratch
         # before these blocks can be re-issued (see flush)

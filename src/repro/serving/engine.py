@@ -83,7 +83,7 @@ from repro.core.roofline import decode_chunk_tokens
 from repro.models.cache import PagedLayout
 from repro.models.model import Model
 from repro.serving.cache import DenseCache, PagedCache
-from repro.serving.events import ChunkEvent, DoneEvent
+from repro.serving.events import ChunkEvent, DoneEvent, FailedEvent
 
 
 @dataclasses.dataclass
@@ -92,6 +92,12 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int
     extras: dict = dataclasses.field(default_factory=dict)
+    # seconds the request may spend in the serving stack before it is
+    # cancelled (None = no deadline). The Router stamps its own clock at
+    # submit; the engine re-stamps on arrival, so engine-side expiry is
+    # a resource-freeing approximation and the Router's check is the
+    # authoritative end-to-end one.
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -185,6 +191,7 @@ class _Slot:
     remaining: int = 0
     generated: list = dataclasses.field(default_factory=list)
     started: float = 0.0          # perf_counter stamp (monotonic)
+    deadline: float | None = None  # absolute perf_counter expiry stamp
 
 
 # jitted executables shared by every engine built on the same Model —
@@ -205,10 +212,13 @@ class ServingEngine:
     # per request per macro-step (built from the chunk's existing host
     # transfer — streaming adds no device syncs) and a DoneEvent per
     # completion; ``container_id`` stamps the emitting container into
-    # every event. Class-level defaults keep every existing
+    # every event. ``fault`` is the test-only FaultInjector hook
+    # (serving/faults.py) consulted at the top of every step and at each
+    # paged block allocation. Class-level defaults keep every existing
     # engine_factory signature working unchanged.
     on_event: Callable[[Any], None] | None = None
     container_id: int = 0
+    fault: Any = None
 
     def __init__(self, model: Model, params: Any,
                  config: EngineConfig | None = None, *,
@@ -297,6 +307,7 @@ class ServingEngine:
         else:
             self.cache_backend = DenseCache(tree, n_rows,
                                             self._batch_axes, self._jits)
+        self._deadline_abs: dict[int, float] = {}  # rid -> expiry (queued)
         self.steps = 0                # step() calls that found work
         self.chunks = 0               # fused decode chunks dispatched
         self.tokens_generated = 0     # tokens emitted (prefill + decode)
@@ -323,6 +334,12 @@ class ServingEngine:
         if self.on_event is not None:
             self.on_event(DoneEvent(comp.rid, self.container_id, comp, now))
 
+    def _emit_fail(self, rid: int, kind: str, reason: str,
+                   now: float) -> None:
+        if self.on_event is not None:
+            self.on_event(FailedEvent(rid, self.container_id, kind,
+                                      reason, now))
+
     def submit(self, req: Request) -> None:
         if req.max_new_tokens <= 0:
             # zero-budget requests complete empty without touching the
@@ -333,6 +350,9 @@ class ServingEngine:
             self.done.append(comp)
             self._emit_done(comp, time.perf_counter())
             return
+        if req.deadline_s is not None:
+            self._deadline_abs[req.rid] = (time.perf_counter()
+                                           + req.deadline_s)
         self.queue.append(req)
 
     def submit_many(self, reqs) -> None:
@@ -443,6 +463,9 @@ class ServingEngine:
                 req = self.queue[0]
                 if self._admit_key(req) != key:
                     break
+                if self.fault is not None and self.fault.refuse_alloc():
+                    blocked = True       # injected pool exhaustion
+                    break
                 if not cb.alloc(free[0], self._cache_tokens(req)):
                     blocked = True
                     break
@@ -481,6 +504,7 @@ class ServingEngine:
             slot.remaining = r.max_new_tokens - 1
             slot.generated = [int(first[j])]
             slot.started = now
+            slot.deadline = self._deadline_abs.pop(r.rid, None)
             self.tokens_generated += 1
             # the prefill sample is the request's first streamed chunk —
             # its arrival is the time-to-first-chunk the Router windows
@@ -496,6 +520,49 @@ class ServingEngine:
             return np.asarray(jnp.argmax(logits, axis=-1))
         self._key, sub = jax.random.split(self._key)
         return np.asarray(jax.random.categorical(sub, logits))
+
+    def cancel(self, rid: int) -> bool:
+        """Remove a request from the engine — queued or mid-decode — and
+        free its cache reservation (paged: via the deferred
+        ``CacheBackend.free``/``flush`` path, so block conservation is
+        exact). Emits NO event: the canceller (Router deadline/retry
+        logic, or an explicit backend ``cancel``) owns the request's
+        terminal event. Returns whether the request was found."""
+        self._deadline_abs.pop(rid, None)
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue = deque(q for q in self.queue if q.rid != rid)
+                return True
+        for i, s in enumerate(self.slots):
+            if s.active and s.rid == rid:
+                self.cache_backend.free(i)
+                self.slots[i] = _Slot()
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Cancel every queued/active request whose deadline passed,
+        emitting a typed FailedEvent per expiry. Runs at the top of each
+        step, so expiry frees slots and paged blocks before admission
+        (the freed blocks are reclaimed by the admission flush)."""
+        now = time.perf_counter()
+        if self._deadline_abs:
+            expired = {rid for rid, t in self._deadline_abs.items()
+                       if now > t}
+            if expired:
+                self.queue = deque(r for r in self.queue
+                                   if r.rid not in expired)
+                for rid in expired:
+                    del self._deadline_abs[rid]
+                    self._emit_fail(rid, "deadline",
+                                    "deadline expired while queued", now)
+        for i, s in enumerate(self.slots):
+            if s.active and s.deadline is not None and now > s.deadline:
+                self._emit_fail(s.rid, "deadline",
+                                f"deadline expired mid-decode after "
+                                f"{len(s.generated)} tokens", now)
+                self.cache_backend.free(i)
+                self.slots[i] = _Slot()
 
     def _finish(self, i: int) -> None:
         s = self.slots[i]
@@ -594,7 +661,10 @@ class ServingEngine:
         if not self.has_work:
             return False
         self.steps += 1
+        if self.fault is not None:
+            self.fault.on_step(self.steps)   # may raise InjectedFault
         t0 = time.perf_counter()
+        self._expire_deadlines()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s.active]
         if active:

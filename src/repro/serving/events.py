@@ -11,9 +11,22 @@ new device syncs**.
 
 Per request the stream is: one or more ``ChunkEvent``s (each carrying the
 tokens that landed in that macro-step; the first one marks
-time-to-first-chunk) followed by exactly one ``DoneEvent`` carrying the
-finished ``Completion``. Events are plain picklable dataclasses so the
-process backend can ship them over a pipe unchanged.
+time-to-first-chunk) followed by exactly one terminal event — a
+``DoneEvent`` carrying the finished ``Completion``, a ``FailedEvent``
+(deadline expiry, retries exhausted, cancellation), or a
+``RejectedEvent`` (load-shedding refused admission, with a retry-after
+hint). A ``RetryEvent`` may appear mid-stream when the Router
+re-dispatches a request lost to a container failure: everything streamed
+before it came from the dead container's aborted attempt and must be
+discarded by the consumer — the retried prefill restarts from the
+prompt, so the chunks AFTER the last RetryEvent are the request's actual
+output. Events are plain picklable dataclasses so the process backend
+can ship them over a pipe unchanged.
+
+``ContainerFailure`` is the container-scoped (not request-scoped) typed
+failure that supervising backends *return* from ``poll()`` instead of
+raising — a dead/hung/erroring container must not take the Router (and
+every healthy container's in-flight requests) down with it.
 
 ``time_s`` is a ``time.perf_counter`` stamp taken at emission, in the
 emitting process. Consumers that compare stamps across processes (the
@@ -47,4 +60,62 @@ class DoneEvent:
     time_s: float
 
 
-Event = Union[ChunkEvent, DoneEvent]
+@dataclasses.dataclass(frozen=True)
+class RetryEvent:
+    """The request was lost to a container failure and re-dispatched to
+    ``container_id`` (its new home) as attempt ``attempt`` (1 = first
+    retry). Chunks streamed before this event belong to the aborted
+    attempt: the retried prefill restarts from the prompt, so consumers
+    reset their accumulation here instead of seeing silently replayed
+    tokens."""
+    rid: int
+    container_id: int
+    attempt: int
+    reason: str
+    time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FailedEvent:
+    """Terminal event: the request ended without a completion.
+    ``kind`` ∈ {"deadline", "container", "cancelled"} — deadline expiry,
+    container failure with retries exhausted (or no healthy container
+    left), or explicit cancellation."""
+    rid: int
+    container_id: int
+    kind: str
+    reason: str
+    time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectedEvent:
+    """Terminal event: admission control shed this request instead of
+    queueing it (bounded queue full, or the ttfc tail over the shed
+    threshold). ``retry_after_s`` is the Router's backpressure hint."""
+    rid: int
+    reason: str
+    retry_after_s: float
+    time_s: float
+    container_id: int = -1        # never dispatched
+
+
+@dataclasses.dataclass(frozen=True)
+class ContainerFailure:
+    """Container-scoped typed failure, surfaced IN a backend's ``poll()``
+    result (never raised from it): the container died (``kind="dead"``,
+    with the child's ``exitcode`` decoded into the message), raised from
+    ``engine.step()`` (``kind="error"``), went silent past the heartbeat
+    timeout (``kind="hung"``), or failed to (re)start (``kind="start"``).
+    ``lost_rids`` are the requests that were in flight there — the Router
+    re-dispatches them to healthy containers."""
+    container_id: int
+    kind: str
+    message: str
+    time_s: float
+    exitcode: int | None = None
+    lost_rids: tuple = ()
+
+
+Event = Union[ChunkEvent, DoneEvent, RetryEvent, FailedEvent,
+              RejectedEvent, ContainerFailure]

@@ -32,6 +32,26 @@ drain, reconstructing ``ContainerResult`` accounting via the existing
 All latency/ttfc stamps are taken router-side (one clock domain even for
 process backends): time-to-first-chunk is measured from ``submit()`` to
 the arrival of the request's first ``ChunkEvent`` at the router.
+
+Fault tolerance (see serving/events.py for the event taxonomy):
+
+* **Retry** — a ``ContainerFailure`` surfaced by a supervising backend
+  carries the rids lost with the container; the Router re-dispatches
+  each to a healthy container (``max_retries`` bound), streaming a
+  ``RetryEvent`` so consumers discard the aborted attempt's chunks.
+* **Deadlines** — ``Request.deadline_s`` (or the Router-wide
+  ``request_deadline_s`` default) rides into the engine, which expires
+  it exactly where resources are freed; the Router keeps an authoritative
+  backstop clock so a dead/silent container cannot outlive a deadline.
+* **Load-shedding** — admission rejects (typed ``RejectedEvent`` with a
+  retry-after hint) when ``max_queue`` in-flight requests exist or the
+  recent ttfc p95 crosses ``shed_p95_s``, so overload degrades into
+  fast rejections instead of an unbounded latency tail.
+
+``stream()`` yields a request's terminal event and then *raises*
+(``RequestFailed`` / ``RequestRejected``, both RuntimeError) so code
+that only calls ``result()`` cannot mistake a failed request for a
+hung one.
 """
 from __future__ import annotations
 
@@ -42,12 +62,38 @@ from typing import Any, Callable, Iterator, Sequence
 
 from repro.core.scheduler import DivideAndSaveScheduler
 from repro.serving.engine import Completion, Request, _bucket
-from repro.serving.events import ChunkEvent, DoneEvent, Event
+from repro.serving.events import (ChunkEvent, ContainerFailure, DoneEvent,
+                                  Event, FailedEvent, RejectedEvent,
+                                  RetryEvent)
 from repro.serving.pool import (ContainerResult, EnergyProxy, _warn_wave_shim,
                                 assemble_wave, latency_percentiles,
                                 percentiles)
 
 _IDLE_SLEEP_S = 0.002
+
+
+class RequestFailed(RuntimeError):
+    """Raised by ``stream()``/``result()`` after a terminal
+    ``FailedEvent`` — deadline expiry, retries exhausted, cancellation.
+    The event rides on ``.event``; the message embeds its reason (which
+    for container failures includes the original traceback)."""
+
+    def __init__(self, event):
+        super().__init__(
+            f"request {event.rid} failed ({event.kind}): {event.reason}")
+        self.event = event
+
+
+class RequestRejected(RequestFailed):
+    """Raised after a terminal ``RejectedEvent`` (admission shed the
+    request). ``event.retry_after_s`` is the backpressure hint."""
+
+    def __init__(self, event):
+        RuntimeError.__init__(
+            self,
+            f"request {event.rid} rejected: {event.reason} "
+            f"(retry after {event.retry_after_s:.2f}s)")
+        self.event = event
 
 
 @dataclasses.dataclass
@@ -65,18 +111,25 @@ class WindowStats:
     ttfc_p95_s: float = 0.0       # time-to-first-chunk, tail
     latency_p50_s: float = 0.0
     latency_p95_s: float = 0.0
+    n_retries: int = 0            # re-dispatches after container failures
+    n_failed: int = 0             # terminal FailedEvents in the window
+    n_shed: int = 0               # admission rejections in the window
 
 
 class CompletionHandle:
     """Live view of one submitted request. ``stream()`` yields the
     request's typed events as they arrive (pumping the router while it
-    waits); ``result()`` drains the stream and returns the Completion."""
+    waits); ``result()`` drains the stream and returns the Completion —
+    or raises ``RequestFailed``/``RequestRejected`` if the request ended
+    without one."""
 
     def __init__(self, rid: int, router: "Router"):
         self.rid = rid
         self._router = router
         self._pending: deque[Event] = deque()
         self.completion: Completion | None = None
+        self.failure: Any = None            # terminal Failed/RejectedEvent
+        self.attempts: int = 0              # retries so far (0 = first try)
         self.ttfc_s: float | None = None    # submit → first ChunkEvent
         self.container_id: int | None = None  # where dispatch placed it
         self.done_at: float | None = None   # DoneEvent arrival stamp
@@ -85,22 +138,35 @@ class CompletionHandle:
     def done(self) -> bool:
         """The terminal event arrived at the router (it may still be
         waiting in this handle's queue for ``stream()`` to consume)."""
-        return self.completion is not None
+        return self.completion is not None or self.failure is not None
 
     def stream(self) -> Iterator[Event]:
-        """Yield this request's ChunkEvents, then its DoneEvent, then
-        stop. Raises RuntimeError if the router is closed mid-stream
-        instead of blocking forever; a second stream() over an
-        already-consumed handle yields nothing (the completion is kept on
-        the handle)."""
+        """Yield this request's events: ChunkEvents (and RetryEvents —
+        discard accumulated chunks at each one), then exactly one
+        terminal event. After yielding a DoneEvent it stops; after a
+        FailedEvent/RejectedEvent it raises ``RequestFailed`` /
+        ``RequestRejected`` — the terminal event is always *yielded
+        first*, so event-driven consumers see it even if they stop
+        iterating there. Raises RuntimeError if the router is closed
+        mid-stream instead of blocking forever; a second stream() over a
+        consumed handle yields nothing more (and re-raises for a failed
+        request — the terminal state is kept on the handle)."""
         while True:
             while self._pending:
                 ev = self._pending.popleft()
                 yield ev
                 if isinstance(ev, DoneEvent):
                     return
+                if isinstance(ev, RejectedEvent):
+                    raise RequestRejected(ev)
+                if isinstance(ev, FailedEvent):
+                    raise RequestFailed(ev)
             if self.completion is not None:
                 return                 # already fully consumed
+            if self.failure is not None:
+                if isinstance(self.failure, RejectedEvent):
+                    raise RequestRejected(self.failure)
+                raise RequestFailed(self.failure)
             if self._router._closed:
                 raise RuntimeError(
                     f"router closed while request {self.rid} was "
@@ -108,7 +174,8 @@ class CompletionHandle:
             self._router._pump(block=True)
 
     def result(self) -> Completion:
-        """Block (pumping the router) until done; the Completion."""
+        """Block (pumping the router) until done; the Completion. Raises
+        ``RequestFailed``/``RequestRejected`` on a failed request."""
         for _ in self.stream():
             pass
         assert self.completion is not None
@@ -138,12 +205,27 @@ class Router:
                  epsilon: float = 0.0, seed: int = 0,
                  deadline_s: float | None = None,
                  window: int = 16,
-                 energy: EnergyProxy | None = None):
+                 energy: EnergyProxy | None = None,
+                 max_retries: int = 1,
+                 request_deadline_s: float | None = None,
+                 deadline_grace_s: float = 0.5,
+                 max_queue: int | None = None,
+                 shed_p95_s: float | None = None):
         if backend is None and backend_factory is None:
             raise ValueError("need a backend or a backend_factory")
         self.energy = energy or EnergyProxy()
         self.window = window
         self.scheduler = scheduler
+        # fault-tolerance knobs: bounded re-dispatch after container
+        # failures, a default per-request deadline (``deadline_s`` above
+        # is the *scheduler objective* constraint, a different thing),
+        # the router-side backstop grace over engine-side expiry, and
+        # the two admission-control thresholds
+        self.max_retries = max_retries
+        self.request_deadline_s = request_deadline_s
+        self.deadline_grace_s = deadline_grace_s
+        self.max_queue = max_queue
+        self.shed_p95_s = shed_p95_s
         self._factory = backend_factory
         self._backends: dict[int, Any] = {}
         if backend_factory is not None:
@@ -161,12 +243,21 @@ class Router:
         self._closed = False
         self._handles: dict[int, CompletionHandle] = {}
         self._rid_cid: dict[int, int] = {}
+        self._requests: dict[int, Request] = {}   # for re-dispatch
         self._submit_t: dict[int, float] = {}
+        self._deadline_abs: dict[int, float] = {}  # router backstop clock
         # per-container multiset of in-flight admission buckets (the
         # bucket-aware half of dispatch)
         self._cid_buckets: list[Counter] = [Counter()
                                             for _ in range(backend.capacity)]
         self.history: list[WindowStats] = []
+        self.container_failures: list[ContainerFailure] = []
+        self.retry_total = 0
+        self.failed_total = 0
+        self.shed_total = 0
+        # always-on ttfc tail sample for the shed threshold (the window
+        # accumulators only run under a scheduler)
+        self._recent_ttfc: deque[float] = deque(maxlen=64)
         self._target_n: int | None = None    # resize awaiting a drain
         self._new_window()
 
@@ -183,6 +274,9 @@ class Router:
                                for cid in range(self.backend.capacity)]
         self._window_done: list[Completion] = []
         self._window_ttfc: list[float] = []
+        self._window_retries = 0
+        self._window_failed = 0
+        self._window_shed = 0
 
     @property
     def in_flight(self) -> int:
@@ -193,7 +287,17 @@ class Router:
         return self.backend.capacity
 
     # -- admission ------------------------------------------------------
-    def _dispatch(self, req: Request) -> int:
+    def _dispatch(self, req: Request) -> int | None:
+        """Pick a container: least-loaded, ties toward a bucket hit.
+        Only containers the backend reports ``alive`` are candidates
+        (discovered with getattr — structural test backends without a
+        supervision surface count as all-alive); None if every container
+        is dead/respawning."""
+        alive = getattr(self.backend, "alive", None)
+        cids = [cid for cid in range(self.backend.capacity)
+                if alive is None or alive(cid)]
+        if not cids:
+            return None
         bucket = _bucket(len(req.prompt))
         load = self.backend.load
 
@@ -201,42 +305,107 @@ class Router:
             return (load(cid),
                     0 if self._cid_buckets[cid][bucket] else 1,
                     cid)
-        cid = min(range(self.backend.capacity), key=key)
+        cid = min(cids, key=key)
         self._cid_buckets[cid][bucket] += 1
         return cid
 
+    def _shed_reason(self) -> str | None:
+        if (self.max_queue is not None
+                and len(self._handles) >= self.max_queue):
+            return (f"queue full: {len(self._handles)} in flight >= "
+                    f"max_queue={self.max_queue}")
+        if self.shed_p95_s is not None and len(self._recent_ttfc) >= 8:
+            _, p95 = percentiles(list(self._recent_ttfc))
+            if p95 > self.shed_p95_s:
+                return (f"ttfc p95 {p95:.3f}s over shed threshold "
+                        f"{self.shed_p95_s:g}s")
+        return None
+
+    def _retry_after_hint(self) -> float:
+        """Backpressure hint for shed requests: roughly one median
+        request latency (the shortest wait after which the picture can
+        have changed), floored so clients cannot hot-loop."""
+        if self.history and self.history[-1].latency_p50_s > 0:
+            return max(0.05, self.history[-1].latency_p50_s)
+        return 0.25
+
+    def _terminal_handle(self, req: Request, ev: Any) -> CompletionHandle:
+        """A handle born terminal (shed, or nowhere to dispatch): never
+        registered in ``_handles``, its single event already pending."""
+        handle = CompletionHandle(req.rid, self)
+        handle.failure = ev
+        handle._pending.append(ev)
+        return handle
+
     def submit(self, req: Request) -> CompletionHandle:
         """Admit one request now; returns immediately with a handle whose
-        ``stream()`` yields the request's events."""
+        ``stream()`` yields the request's events. Under overload the
+        handle may come back already shed (its stream yields one
+        ``RejectedEvent`` and raises ``RequestRejected``)."""
         if self._closed:
             raise RuntimeError("router is closed")
         if req.rid in self._handles:
             raise ValueError(f"request id {req.rid} is already in flight")
+        now = time.perf_counter()
+        shed = self._shed_reason()
+        if shed is not None:
+            self.shed_total += 1
+            self._window_shed += 1
+            return self._terminal_handle(req, RejectedEvent(
+                req.rid, shed, self._retry_after_hint(), now))
+        if req.deadline_s is None and self.request_deadline_s is not None:
+            req = dataclasses.replace(
+                req, deadline_s=self.request_deadline_s)
         cid = self._dispatch(req)
+        if cid is None:
+            self.failed_total += 1
+            self._window_failed += 1
+            return self._terminal_handle(req, FailedEvent(
+                req.rid, -1, "container",
+                "no healthy container to dispatch to "
+                "(all circuit-broken or respawning)", now))
         handle = CompletionHandle(req.rid, self)
         handle.container_id = cid
         self._handles[req.rid] = handle
         self._rid_cid[req.rid] = cid
-        self._submit_t[req.rid] = time.perf_counter()
+        self._requests[req.rid] = req
+        self._submit_t[req.rid] = now
+        if req.deadline_s is not None:
+            self._deadline_abs[req.rid] = now + req.deadline_s
         self.backend.submit(cid, req)
         return handle
 
     # -- event pump -----------------------------------------------------
     def _pump(self, block: bool = False) -> list[Event]:
-        """Advance the backend and route its events to handles. With
-        ``block`` and nothing to route, naps briefly so process-backend
-        waits don't spin."""
+        """Advance the backend and route its events to handles —
+        including ``ContainerFailure`` records (retry/fail the lost
+        requests) and the router-side deadline backstop. With ``block``
+        and nothing to route, naps briefly so process-backend waits
+        don't spin."""
         events = self.backend.poll()
         now = time.perf_counter()
         for ev in events:
+            if isinstance(ev, ContainerFailure):
+                self._on_container_failure(ev)
+                continue
             handle = self._handles.get(ev.rid)
             if handle is None:          # stale event for a dropped handle
                 continue
             handle._pending.append(ev)
             if isinstance(ev, ChunkEvent) and handle.ttfc_s is None:
                 handle.ttfc_s = now - self._submit_t[ev.rid]
+                self._recent_ttfc.append(handle.ttfc_s)
             elif isinstance(ev, DoneEvent):
                 self._on_done(handle, ev)
+            elif isinstance(ev, FailedEvent):
+                # engine-side terminal (deadline expired inside the
+                # container, resources already freed there): the event is
+                # in the handle's queue, just release the router's state
+                self._forget(ev.rid)
+                handle.failure = ev
+                self.failed_total += 1
+                self._window_failed += 1
+        self._expire_deadlines(now)
         if self.scheduler is not None:
             self._maybe_rotate_window()
         if block and not events:
@@ -248,15 +417,117 @@ class Router:
         routed batch (a tap — the events still reach their handles)."""
         return self._pump(block=False)
 
+    def _forget(self, rid: int) -> None:
+        """Release every router-side record of ``rid`` (the handle's
+        terminal state is the caller's to set)."""
+        cid = self._rid_cid.pop(rid, None)
+        req = self._requests.pop(rid, None)
+        if cid is not None and req is not None:
+            self._cid_buckets[cid][_bucket(len(req.prompt))] -= 1
+        self._handles.pop(rid, None)
+        self._submit_t.pop(rid, None)
+        self._deadline_abs.pop(rid, None)
+
+    def _fail_request(self, rid: int, kind: str, reason: str) -> None:
+        """Terminal FailedEvent for an in-flight request (router-side
+        origin: retries exhausted, backstop deadline, cancel)."""
+        handle = self._handles.get(rid)
+        cid = self._rid_cid.get(rid, -1)
+        self._forget(rid)
+        if handle is None:
+            return
+        ev = FailedEvent(rid, cid if cid is not None else -1, kind,
+                         reason, time.perf_counter())
+        handle.failure = ev
+        handle._pending.append(ev)
+        self.failed_total += 1
+        self._window_failed += 1
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Authoritative deadline backstop: the engine expires deadlines
+        itself (that frees slots/blocks exactly where they live), but a
+        dead, hung or reply-dropping container can't — so past the grace
+        the router cancels backend-side and fails the request here."""
+        if not self._deadline_abs:
+            return
+        expired = [rid for rid, t in self._deadline_abs.items()
+                   if now > t + self.deadline_grace_s]
+        for rid in expired:
+            cid = self._rid_cid.get(rid)
+            cancel = getattr(self.backend, "cancel", None)
+            if cancel is not None and cid is not None:
+                cancel(cid, rid)
+            self._fail_request(
+                rid, "deadline",
+                "deadline exceeded (router backstop, "
+                f"{self.deadline_grace_s:g}s past the engine's own expiry)")
+
+    def _on_container_failure(self, fail: ContainerFailure) -> None:
+        """Re-dispatch (bounded) or fail every request lost with a
+        container. The dead container's bucket counters for these rids
+        are released; requests that still fit their deadline go to the
+        least-loaded healthy container with a RetryEvent in the stream
+        and their *remaining* deadline budget."""
+        self.container_failures.append(fail)
+        reason = fail.message.splitlines()[0]
+        for rid in fail.lost_rids:
+            handle = self._handles.get(rid)
+            if handle is None:
+                continue
+            req = self._requests.get(rid)
+            old_cid = self._rid_cid.pop(rid, None)
+            if old_cid is not None and req is not None:
+                self._cid_buckets[old_cid][_bucket(len(req.prompt))] -= 1
+            now = time.perf_counter()
+            deadline_abs = self._deadline_abs.get(rid)
+            handle.attempts += 1
+            if req is None:
+                self._fail_request(rid, "container",
+                                   f"lost to {reason}; request body "
+                                   "unknown (cannot re-dispatch)")
+                continue
+            if deadline_abs is not None and now >= deadline_abs:
+                self._fail_request(rid, "deadline",
+                                   f"deadline expired while lost to "
+                                   f"{reason}")
+                continue
+            if handle.attempts > self.max_retries:
+                self._fail_request(
+                    rid, "container",
+                    f"retries exhausted after {handle.attempts} attempts; "
+                    f"last failure: {fail.message}")
+                continue
+            cid = self._dispatch(req)
+            if cid is None:
+                self._fail_request(
+                    rid, "container",
+                    f"no healthy container left to retry on; "
+                    f"last failure: {fail.message}")
+                continue
+            self._rid_cid[rid] = cid
+            handle.container_id = cid
+            self.retry_total += 1
+            self._window_retries += 1
+            handle._pending.append(RetryEvent(
+                rid, cid, handle.attempts, reason, now))
+            resubmit = req
+            if deadline_abs is not None:
+                # the retry inherits the REMAINING budget, not a fresh
+                # deadline — end-to-end means across attempts
+                resubmit = dataclasses.replace(
+                    req, deadline_s=deadline_abs - now)
+            try:
+                self.backend.submit(cid, resubmit)
+            except RuntimeError as e:
+                self._fail_request(rid, "container",
+                                   f"re-dispatch to container {cid} "
+                                   f"failed: {e}")
+
     def _on_done(self, handle: CompletionHandle, ev: DoneEvent) -> None:
         comp = ev.completion
         handle.completion = comp
         handle.done_at = time.perf_counter()
-        rid = handle.rid
-        cid = self._rid_cid.pop(rid)
-        self._cid_buckets[cid][_bucket(comp.prompt_len)] -= 1
-        del self._handles[rid]
-        self._submit_t.pop(rid, None)
+        self._forget(handle.rid)
         if self.scheduler is not None:
             # window accumulators only exist to feed the scheduler; a
             # fixed-capacity router must not retain one Completion per
@@ -265,9 +536,25 @@ class Router:
             if handle.ttfc_s is not None:
                 self._window_ttfc.append(handle.ttfc_s)
 
+    def cancel(self, rid: int, reason: str = "cancelled by caller") -> bool:
+        """Cancel an in-flight request: backend-side removal (slot and
+        paged blocks freed via the engine's cancel path) plus a terminal
+        ``FailedEvent(kind="cancelled")`` on the handle. Returns whether
+        the request was still in flight."""
+        if rid not in self._handles:
+            return False
+        cid = self._rid_cid.get(rid)
+        cancel = getattr(self.backend, "cancel", None)
+        if cancel is not None and cid is not None:
+            cancel(cid, rid)
+        self._fail_request(rid, "cancelled", reason)
+        return True
+
     def drain(self) -> None:
-        """Pump until every in-flight request has completed (their
-        handles still hold any unconsumed events)."""
+        """Pump until every in-flight request reached a terminal event
+        (their handles still hold any unconsumed events). Failed
+        requests leave ``_handles`` too, so a drain over failures
+        terminates instead of hanging."""
         while self._handles:
             self._pump(block=True)
 
@@ -309,7 +596,8 @@ class Router:
         self.history.append(WindowStats(
             len(self.history), n, wall, energy_j, len(self._window_done),
             toks, toks / wall if wall > 0 else 0.0, ttfc50, ttfc95,
-            lat50, lat95))
+            lat50, lat95, n_retries=self._window_retries,
+            n_failed=self._window_failed, n_shed=self._window_shed))
         assert self.scheduler is not None
         self.scheduler.observe(n, wall, energy_j)
         if repick:
@@ -340,6 +628,13 @@ class Router:
         handles = [self.submit(r) for r in requests]
         self.drain()
         wall = time.perf_counter() - t0
+        failed = [h.rid for h in handles if h.completion is None]
+        if failed:
+            # waves have no per-request failure surface: a request that
+            # ended in a FailedEvent (even after retries) fails the wave
+            raise RuntimeError(
+                f"wave failed: requests {failed} ended without a "
+                "completion (see router.container_failures)")
         capacity = backend.capacity
         segments: list[list[Request]] = [[] for _ in range(capacity)]
         comps: list[list[Completion]] = [[] for _ in range(capacity)]

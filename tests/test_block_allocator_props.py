@@ -21,7 +21,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings      # noqa: E402
 from hypothesis import strategies as st     # noqa: E402
 
-from repro.serving.cache import BlockAllocator      # noqa: E402
+from repro.models.cache import PagedLayout          # noqa: E402
+from repro.serving.cache import BlockAllocator, PagedCache  # noqa: E402
 
 
 @given(st.integers(1, 64), st.lists(st.integers(0, 70), max_size=40),
@@ -63,6 +64,73 @@ def test_all_or_nothing(n_blocks, n):
         assert got is not None and a.n_free == n_blocks - n
     else:
         assert got is None and a.n_free == n_blocks
+
+
+# -- PagedCache release-path conservation -----------------------------------
+#
+# The engine has three ways to release a row's reservation: completion
+# (slot finishes), deadline expiry (engine-side _expire_deadlines) and
+# cancellation (Router retry/backstop/cancel via engine.cancel). All
+# three funnel into PagedCache.free + a later flush, and any two can
+# race on the same row (e.g. the Router's backstop cancels a request the
+# engine completed in the same macro-step). The invariant chaos tests
+# rely on: ANY interleaving of these releases — duplicates included —
+# leaves free + live == pool at every step, zero leaked and zero
+# double-freed blocks once flushed. A tree with no paged group keeps the
+# whole walk on the host accounting (no jax device ops), which is
+# exactly the layer these invariants live in.
+
+@given(st.integers(1, 12),                       # rows
+       st.integers(1, 8),                        # block_size
+       st.integers(1, 64),                       # max_blocks
+       st.lists(st.tuples(st.sampled_from(["admit", "grow", "complete",
+                                           "expire", "cancel", "flush"]),
+                          st.integers(0, 11),    # row
+                          st.integers(1, 24)),   # token count
+                max_size=60),
+       st.randoms())
+@settings(max_examples=200, deadline=None)
+def test_release_interleavings_conserve_blocks(n_rows, block_size,
+                                               max_blocks, ops, rnd):
+    layout = PagedLayout(block_size=block_size, max_blocks=max_blocks)
+    max_len = block_size * max_blocks
+    cache = PagedCache(tree={}, n_rows=n_rows, layout=layout,
+                       max_len=max_len, batch_axes=None, jits={})
+    held: set[int] = set()                       # rows with a reservation
+
+    def check():
+        assert (cache.allocator.n_free + cache.n_live_blocks
+                == max_blocks), "leaked or double-freed blocks"
+        flat = [b for r in cache._blocks for b in r]
+        assert len(flat) == len(set(flat)), "aliased live blocks"
+
+    for op, row, toks in ops:
+        row %= n_rows
+        if op == "admit":
+            if row in held:
+                continue                          # engine never re-admits
+            if cache.alloc(row, min(toks, max_len)):
+                held.add(row)
+        elif op == "grow":
+            if row in held and row not in cache._pending:
+                cache.append(row, 1)
+        elif op == "flush":
+            cache.flush()
+            held -= {r for r in range(n_rows) if not cache._blocks[r]}
+        else:                                    # complete/expire/cancel
+            # all three release paths call free(); racing releases of
+            # the same row (complete + cancel, expire + cancel...) must
+            # be idempotent — model that by freeing 1 or 2 times
+            for _ in range(rnd.randint(1, 2)):
+                cache.free(row)
+        check()
+    cache.flush()
+    check()
+    for row in range(n_rows):
+        cache.free(row)
+    cache.flush()
+    assert cache.allocator.n_free == max_blocks
+    assert cache.n_live_blocks == 0
 
 
 @given(st.integers(1, 32), st.integers(1, 8))

@@ -180,7 +180,10 @@ def test_bucket_table_single_definition():
 def test_public_surface_is_curated():
     import repro.serving as s
     assert s.__all__ == ["Router", "Request", "Completion", "ChunkEvent",
-                         "DoneEvent", "ContainerBackend", "EngineConfig",
+                         "DoneEvent", "RetryEvent", "FailedEvent",
+                         "RejectedEvent", "ContainerFailure",
+                         "RequestFailed", "RequestRejected", "Fault",
+                         "FaultPlan", "ContainerBackend", "EngineConfig",
                          "CacheBackend"]
     for name in s.__all__:
         assert getattr(s, name) is not None

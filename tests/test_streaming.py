@@ -11,11 +11,24 @@ streaming CI lane runs this module in full).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax
 import numpy as np
 import pytest
+
+try:
+    HOST_CORES = len(os.sched_getaffinity(0))
+except AttributeError:              # non-Linux dev host
+    HOST_CORES = os.cpu_count() or 1
+
+# process containers need pairwise-disjoint cpusets; tests that pin two
+# real containers cannot run (rather than silently share cores) on a
+# single-core host/CI runner
+needs_two_cores = pytest.mark.skipif(
+    HOST_CORES < 2, reason="needs >=2 cores for disjoint container "
+                           f"cpusets (host exposes {HOST_CORES})")
 
 from repro.serving import (ChunkEvent, ContainerBackend, DoneEvent,
                            ProcessBackend, Request, Router, ServingEngine,
@@ -429,6 +442,7 @@ def test_stream_engine_error_propagates(reduced_models):
 # process backend (spawn cost: slow; the streaming CI lane runs these)
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
+@needs_two_cores
 def test_process_backend_stream_bitmatches_blocking(reduced_models):
     model, params = reduced_models["qwen3-0.6b"]
     cfg = model.cfg
