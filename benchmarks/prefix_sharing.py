@@ -1,0 +1,196 @@
+"""Prefix sharing — copy-on-write prompt-block reuse, measured.
+
+Workload: every request opens with the same 64-token system prefix
+(4 full 16-token blocks) followed by a mixed-length private tail — the
+shape shared-system-prompt serving actually produces. The same wave is
+streamed through the Router twice at an **equal block budget**, once
+with ``prefix_cache`` off and once on. With sharing on, a seed request
+populates the content-hash index during warmup, so the timed wave maps
+its leading blocks onto cache hits and only prefills the tail.
+
+Headline numbers (``BENCH_prefix.json``): prefill tokens actually
+executed, prefill FLOPs (roofline ``2·N_active`` per executed token)
+and time-to-first-chunk p50 — all three must drop with sharing on.
+Greedy outputs are bit-identical either way (tests/test_paged_cache.py
+pins that across all six families); this lane measures only the cost.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save, save_bench, table
+
+PREFIX_LEN = 64        # 4 full blocks at block_size=16
+BLOCK_SIZE = 16
+
+
+def bench_config():
+    from repro.configs.base import reduce_config
+    from repro.configs.registry import get_config
+
+    return reduce_config(get_config("qwen3-0.6b"), n_layers=4, d_model=512,
+                         n_heads=8, n_kv_heads=4, d_ff=2048,
+                         vocab_size=8192)
+
+
+def shared_prefix_requests(cfg, n_requests: int, max_new: int, rid0: int,
+                           tail_range: tuple[int, int] = (8, 24),
+                           seed: int = 0):
+    """One shared 64-token prefix, per-request private tails.
+
+    The prefix rng is fixed so every wave emits the same prefix content
+    (same block hashes → hits), while tail CONTENT varies with ``seed``
+    so a later wave never hits a previous wave's tail blocks — only the
+    shared prefix is reused, which is the effect under test. Tail
+    LENGTHS are a fixed cycle, so every wave produces the same admission
+    batch compositions and warmup compiles exactly the jit keys the
+    timed waves use."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    prefix = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (PREFIX_LEN,), dtype=np.int32)
+    rng = np.random.default_rng(1000 + seed)
+    lo, hi = tail_range
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            (lo + (i * 5) % (hi - lo),), dtype=np.int32)
+        reqs.append(Request(rid=rid0 + i,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def measure(model, params, share: bool, n_requests: int, max_new: int,
+            reps: int, n_slots: int = 4, max_len: int = 128,
+            max_blocks: int = 32) -> dict:
+    """One mode (sharing on/off) at a fixed block budget: warm the
+    engine (compile + populate the prefix index when sharing), then
+    stream ``reps`` timed waves and keep the fastest. Executed-token and
+    hit counters are read as deltas around the timed waves, so warmup
+    compilation does not pollute them."""
+    import numpy as np
+
+    from repro.serving import Router
+    from repro.serving.backend import ThreadBackend
+    from repro.serving.engine import EngineConfig
+
+    config = EngineConfig(n_slots=n_slots, max_len=max_len, cache="paged",
+                          block_size=BLOCK_SIZE, max_blocks=max_blocks,
+                          prefix_cache=share)
+    backend = ThreadBackend(model, params, 1, config=config)
+    router = Router(backend)
+    rid = 0
+
+    def wave(n):
+        nonlocal rid
+        reqs = shared_prefix_requests(model.cfg, n, max_new, rid, seed=rid)
+        rid += n
+        handles = [router.submit(r) for r in reqs]
+        router.drain()
+        return handles
+
+    # warmup: a lone seed request registers the prefix blocks (and
+    # compiles the full-prefill bucket), then a full wave compiles the
+    # suffix buckets + decode; both modes get the identical warmup
+    wave(1)
+    wave(n_requests)
+    eng = backend.engines[0]
+    exec0 = eng.prefill_tokens_executed
+    hits0 = eng.prefix_hit_tokens_total
+
+    best = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        handles = wave(n_requests)
+        wall = time.perf_counter() - t0
+        ttfc = [h.ttfc_s for h in handles if h.ttfc_s is not None]
+        toks = sum(len(h.completion.tokens) for h in handles)
+        hit_toks = sum(h.completion.prefix_hit_tokens for h in handles)
+        row = {"wall_s": wall,
+               "tokens_per_s": toks / wall if wall > 0 else 0.0,
+               "ttfc_p50_s": float(np.percentile(ttfc, 50)),
+               "ttfc_p95_s": float(np.percentile(ttfc, 95)),
+               "hit_tokens": hit_toks}
+        if best is None or row["wall_s"] < best["wall_s"]:
+            best = row
+    reps_exec = eng.prefill_tokens_executed - exec0
+    reps_hits = eng.prefix_hit_tokens_total - hits0
+    router.close()
+
+    from repro.core.roofline import prefill_flops
+    best.update({
+        "share": share,
+        # per-wave averages over the timed reps (every wave is identical)
+        "prefill_tokens_executed": reps_exec / reps,
+        "prefix_hit_tokens": reps_hits / reps,
+        "prefill_flops": prefill_flops(
+            model.cfg, (reps_exec + reps_hits) // reps, reps_hits // reps)})
+    return best
+
+
+def run(quick: bool = False) -> str:
+    import jax
+
+    # reps >= 2 even in smoke: the first shared-mode wave pays a one-time
+    # warm-in (first real execution of the gather→suffix→insert chain)
+    # that best-of-reps filters like any other first-run noise
+    n_requests, max_new, reps = (6, 4, 2) if quick else (16, 8, 3)
+    if quick:
+        from repro.configs.registry import get_config as _get
+        cfg = _get("qwen3-0.6b-reduced")
+    else:
+        cfg = bench_config()
+    from repro.models.model import Model
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rows = [measure(model, params, share, n_requests, max_new, reps)
+            for share in (False, True)]
+    off, on = rows
+    exec_drop = 1.0 - (on["prefill_tokens_executed"]
+                       / off["prefill_tokens_executed"])
+    flop_drop = 1.0 - on["prefill_flops"] / off["prefill_flops"]
+    ttfc_drop = 1.0 - on["ttfc_p50_s"] / off["ttfc_p50_s"]
+
+    lines = ["# Prefix sharing — CoW prompt-block reuse (equal block "
+             "budget)", "",
+             f"{n_requests} requests × {max_new} new tokens, shared "
+             f"{PREFIX_LEN}-token prefix + mixed tails, arch {cfg.name}; "
+             f"paged cache, block_size={BLOCK_SIZE}, same max_blocks "
+             "both modes; streamed via the Router, warm engine", ""]
+    lines += table(
+        ["prefix_cache", "prefill tok executed", "hit tok",
+         "prefill GFLOP", "ttfc p50 (s)", "ttfc p95 (s)", "wall (s)"],
+        [[("on" if r["share"] else "off"), r["prefill_tokens_executed"],
+          r["prefix_hit_tokens"], r["prefill_flops"] / 1e9,
+          r["ttfc_p50_s"], r["ttfc_p95_s"], r["wall_s"]] for r in rows])
+    lines += ["", f"prefill tokens executed: -{exec_drop:.1%}   "
+              f"prefill FLOPs: -{flop_drop:.1%}   "
+              f"ttfc p50: -{ttfc_drop:.1%}"]
+
+    save_bench("prefix", {
+        "config": cfg.name, "prefix_len": PREFIX_LEN,
+        "block_size": BLOCK_SIZE, "n_requests": n_requests,
+        "prefill_tokens_executed_off": off["prefill_tokens_executed"],
+        "prefill_tokens_executed_on": on["prefill_tokens_executed"],
+        "prefill_flops_off": off["prefill_flops"],
+        "prefill_flops_on": on["prefill_flops"],
+        "prefix_hit_tokens_on": on["prefix_hit_tokens"],
+        "ttfc_p50_off_s": off["ttfc_p50_s"],
+        "ttfc_p50_on_s": on["ttfc_p50_s"],
+        "exec_tokens_reduction": exec_drop,
+        "ttfc_p50_reduction": ttfc_drop})
+    return save("prefix_sharing", {"measured": rows}, lines)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", "--smoke", action="store_true", dest="quick",
+                    help="tiny config / fewer requests (CI smoke)")
+    args = ap.parse_args()
+    print(run(quick=args.quick))

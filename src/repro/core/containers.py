@@ -108,16 +108,21 @@ def feasible(cfg: ArchConfig, spec: ContainerSpec, hbm_bytes: float = 16e9,
              activation_headroom: float = 0.35,
              extra_bytes_per_chip: float = 0.0, kv_blocks: int = 0,
              block_size: int = 16, kv_dtype_bytes: int = 2,
-             max_len: int = 512) -> bool:
+             max_len: int = 512, prefix_cached_blocks: int = 0) -> bool:
     """Does one container's weight shard (+KV/activations) fit per chip?
     ``kv_blocks > 0`` adds the block-granular paged-cache pool (shared
     inside a container, so divided over its chips) — the memory model the
     paged engine actually allocates, replacing the n_slots × max_len
-    dense worst case."""
+    dense worst case. ``prefix_cached_blocks`` budgets a resident
+    prefix-cache working set ON TOP of the concurrency pool: those blocks
+    stay allocated between requests (refcount-held by the cache index),
+    so a deployment sized for ``kv_blocks`` of in-flight state plus R
+    cached blocks must fit ``kv_blocks + R``."""
     need = weight_bytes_per_chip(cfg, spec) + extra_bytes_per_chip
-    if kv_blocks:
-        need += (kv_blocks * kv_block_bytes(cfg, block_size, max_len=max_len,
-                                            dtype_bytes=kv_dtype_bytes)
+    if kv_blocks or prefix_cached_blocks:
+        need += ((kv_blocks + prefix_cached_blocks)
+                 * kv_block_bytes(cfg, block_size, max_len=max_len,
+                                  dtype_bytes=kv_dtype_bytes)
                  / spec.chips_per_container)
     return need <= hbm_bytes * (1.0 - activation_headroom)
 
@@ -128,17 +133,19 @@ def feasible_counts(cfg: ArchConfig, total_chips: int,
                     activation_headroom: float = 0.35,
                     extra_bytes_per_chip: float = 0.0, kv_blocks: int = 0,
                     block_size: int = 16, kv_dtype_bytes: int = 2,
-                    max_len: int = 512) -> list[int]:
+                    max_len: int = 512,
+                    prefix_cached_blocks: int = 0) -> list[int]:
     """Container counts the online scheduler may search: the power-of-two
     factorisations of the pod whose per-chip weight shard (+headroom) fits
     — the memory bound that capped the paper's TX2 at 6 containers. With
     ``kv_blocks`` set, each container additionally budgets its paged KV
-    pool, so DivideAndSaveScheduler sees the block-granular frontier."""
+    pool (plus ``prefix_cached_blocks`` of resident prefix-cache working
+    set), so DivideAndSaveScheduler sees the block-granular frontier."""
     return [s.n_containers
             for s in factorizations(total_chips, max_containers)
             if feasible(cfg, s, hbm_bytes, activation_headroom,
                         extra_bytes_per_chip, kv_blocks, block_size,
-                        kv_dtype_bytes, max_len)]
+                        kv_dtype_bytes, max_len, prefix_cached_blocks)]
 
 
 def container_mesh(spec: ContainerSpec,

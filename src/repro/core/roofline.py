@@ -88,6 +88,17 @@ def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
     return factor * (n * d_dec + n_enc * d_enc)
 
 
+def prefill_flops(cfg: ArchConfig, n_tokens: int,
+                  hit_tokens: int = 0) -> float:
+    """Forward FLOPs of one prefill: ``2·N_active`` per token actually
+    executed. ``hit_tokens`` is the prefix-cache hit length — those
+    positions are served from cached K/V and never enter the prefill
+    dispatch, so they cost nothing here (the benchmark's FLOPs-saved
+    accounting; cached pages still charge HBM, see
+    ``containers.feasible``'s ``prefix_cached_blocks``)."""
+    return 2.0 * cfg.active_param_count() * max(n_tokens - hit_tokens, 0)
+
+
 def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
                         overhead_s: float = DISPATCH_OVERHEAD_S,
                         overhead_frac: float = 0.1,

@@ -52,7 +52,8 @@ def _engine_config(args) -> EngineConfig:
     frozen EngineConfig threaded through every backend flavour."""
     return EngineConfig(n_slots=args.slots, cache=args.cache,
                         block_size=args.block_size,
-                        max_blocks=args.max_blocks)
+                        max_blocks=args.max_blocks,
+                        prefix_cache=args.prefix_cache)
 
 
 def _make_backend(args, cfg, model, params, n, units):
@@ -119,6 +120,16 @@ def main() -> None:
                     help="physical KV blocks per container (paged; "
                          "default: the dense footprint "
                          "slots*max_len/block_size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix sharing in the paged "
+                         "cache: requests whose leading prompt blocks "
+                         "hash-match cached blocks skip that much "
+                         "prefill (requires --cache paged; no-op for "
+                         "architectures the sharing gate excludes)")
+    ap.add_argument("--prefix-cached-blocks", type=int, default=0,
+                    help="resident prefix-cache working set budgeted "
+                         "on top of the kv pool when sizing feasible "
+                         "container counts (online mode)")
     ap.add_argument("--waves", type=int, default=6,
                     help="traffic waves (adaptive: scheduler windows)")
     ap.add_argument("--objective", default="energy",
@@ -234,7 +245,8 @@ def main() -> None:
     # scheduler searches the frontier the engine actually allocates
     engine_cfg = _engine_config(args)
     kv_kw = ({"kv_blocks": engine_cfg.resolved_max_blocks,
-              "block_size": engine_cfg.block_size}
+              "block_size": engine_cfg.block_size,
+              "prefix_cached_blocks": args.prefix_cached_blocks}
              if args.cache == "paged" else {})
     feasible = feasible_counts(cfg, units, **kv_kw) or [1]
     if args.stream:

@@ -314,6 +314,30 @@ def attn_prefill_into_cache(p: dict, cfg: ArchConfig, x: jax.Array,
     return y, {"k": ck, "v": cv}
 
 
+def attn_suffix_prefill_into_cache(p: dict, cfg: ArchConfig, x: jax.Array,
+                                   cache: dict, ctx_k: jax.Array,
+                                   ctx_v: jax.Array,
+                                   offset: int) -> tuple[jax.Array, dict]:
+    """Prefill only the residual suffix behind ``offset`` already-cached
+    positions (prefix sharing): queries are the suffix tokens at their
+    absolute rope positions, keys/values are [cached prefix, suffix].
+    Causal masking right-aligns queries against the key axis, so the
+    context width must equal ``offset`` EXACTLY — padding belongs on the
+    suffix side only. Returns the suffix K/V as the mini-cache (width ==
+    S: the whole ring is the suffix). Full-horizon rope attention only —
+    the engine's sharing gate excludes windows, MLA and int8 caches."""
+    B, S, _ = x.shape
+    positions = offset + jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    ck = jnp.concatenate([ctx_k.astype(k.dtype), k], axis=1)
+    cv = jnp.concatenate([ctx_v.astype(v.dtype), v], axis=1)
+    out = kops.flash_attention(q, ck, cv, causal=True, window=0,
+                               softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k.astype(cache["k"].dtype),
+               "v": v.astype(cache["v"].dtype)}
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2): latent KV cache, absorbed decode
 # ---------------------------------------------------------------------------

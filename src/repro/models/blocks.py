@@ -70,6 +70,19 @@ def attn_mlp_prefill(p, cfg: ArchConfig, x, cache, *, window: int = 0):
     return constrain_batch(x), cache
 
 
+def attn_mlp_suffix_prefill(p, cfg: ArchConfig, x, cache, ctx_k, ctx_v,
+                            offset: int):
+    """Residual-suffix prefill (prefix sharing): attention runs against
+    [cached prefix K/V, suffix K/V]. GQA only — the engine's sharing
+    gate never routes MLA here."""
+    xin = norm_fwd(cfg, p["ln1"], x)
+    h, cache = attn.attn_suffix_prefill_into_cache(
+        p["attn"], cfg, xin, cache, ctx_k, ctx_v, offset)
+    x = x + h
+    x = x + mlp_fwd(p["mlp"], norm_fwd(cfg, p["ln2"], x), cfg.act)
+    return constrain_batch(x), cache
+
+
 def attn_mlp_decode(p, cfg: ArchConfig, x, cache, pos):
     xin = norm_fwd(cfg, p["ln1"], x)
     if "w_dkv" in p["attn"]:
@@ -119,6 +132,19 @@ def attn_moe_prefill(p, cfg: ArchConfig, x, cache, *, window: int = 0):
                                                 window=window)
     x = x + h
     mo, _ = moe_lib.moe_fwd(p["moe"], cfg, norm_fwd(cfg, p["ln2"], x), cfg.act)
+    return constrain_batch(x + mo), cache
+
+
+def attn_moe_suffix_prefill(p, cfg: ArchConfig, x, cache, ctx_k, ctx_v,
+                            offset: int):
+    """Residual-suffix prefill for MoE blocks (non-MLA only — the
+    engine's sharing gate excludes latent caches)."""
+    xin = norm_fwd(cfg, p["ln1"], x)
+    h, cache = attn.attn_suffix_prefill_into_cache(
+        p["attn"], cfg, xin, cache, ctx_k, ctx_v, offset)
+    x = x + h
+    mo, _ = moe_lib.moe_fwd(p["moe"], cfg, norm_fwd(cfg, p["ln2"], x),
+                            cfg.act)
     return constrain_batch(x + mo), cache
 
 

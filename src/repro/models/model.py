@@ -459,6 +459,48 @@ class Model:
             raise ValueError(fam)
         return self._head(params, self._sel(x, logits_at)), new_cache
 
+    def prefill_suffix(self, params: Params, batch: dict, cache: Cache,
+                       ctx: dict, offset: int,
+                       logits_at: int | jax.Array = -1
+                       ) -> tuple[jax.Array, Cache]:
+        """Prefill only the residual suffix of prompts whose first
+        ``offset`` positions are prefix-cache hits: ``ctx`` mirrors the
+        cache tree with per-group ``{"k", "v"}`` context of width exactly
+        ``offset`` (gathered from the shared pages), ``batch["tokens"]``
+        holds the suffix tokens, and the returned mini-cache covers the
+        suffix positions only (``insert`` lands it at ``offset``).
+        Restricted to the sharing-eligible families — dense/moe, non-MLA,
+        full-horizon rope attention, text-only suffix (the engine's gate;
+        vision/audio prefixes are inside the shared ``offset``)."""
+        cfg, fam = self.cfg, self.fam
+        if fam not in ("dense", "moe") or cfg.mla:
+            raise ValueError(f"prefix sharing unsupported for {fam}")
+        x = constrain_batch(embed_fwd(params["embed"], batch["tokens"]))
+        new_cache: dict = {}
+        if fam == "moe" and self.n_dense:
+            def d_step(carry, pcc):
+                p, c, ck, cv = pcc
+                h, nc = blocks.attn_mlp_suffix_prefill(p, cfg, carry, c,
+                                                       ck, cv, offset)
+                return h, nc
+            x, nd = jax.lax.scan(d_step, x, (params["dense0"],
+                                             cache["dense0"],
+                                             ctx["dense0"]["k"],
+                                             ctx["dense0"]["v"]))
+            new_cache["dense0"] = nd
+        fwd = (blocks.attn_moe_suffix_prefill if fam == "moe"
+               else blocks.attn_mlp_suffix_prefill)
+
+        def step(carry, pcc):
+            p, c, ck, cv = pcc
+            h, nc = fwd(p, cfg, carry, c, ck, cv, offset)
+            return h, nc
+        x, ns = jax.lax.scan(step, x, (params["stack"], cache["stack"],
+                                       ctx["stack"]["k"],
+                                       ctx["stack"]["v"]))
+        new_cache["stack"] = ns
+        return self._head(params, self._sel(x, logits_at)), new_cache
+
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------

@@ -26,11 +26,29 @@ attribute. Paged bookkeeping invariants:
   the allocator — otherwise a frozen row could scribble on a block that
   admission just handed to a new sequence.
 
-``BlockAllocator`` is the pure-Python free-list underneath (hypothesis
-property tests pin down no-leak / no-alias round-trips).
+Prefix sharing (``prefix_cache=True``): full prompt blocks are indexed
+by content hash, and admission maps a request's leading blocks onto
+cache hits — several rows' tables point at the SAME physical page, and
+only the residual suffix runs prefill. The machinery:
+
+* ``BlockAllocator`` is refcounted: ``alloc`` hands out fresh blocks at
+  refcount 1, ``share`` bumps, ``release`` drops and returns whatever
+  hit zero. Conservation becomes ``n_free + n_live == n_blocks`` where
+  ``n_live`` counts DISTINCT allocated blocks (each once, however many
+  refs it carries).
+* the cache holds its OWN reference on every indexed block, so a hit
+  block survives its registering row. Blocks whose only remaining
+  reference is the cache's sit in an LRU; admission evicts from it
+  under pressure BEFORE refusing (``_reserve``).
+* a write into a block with refcount > 1 forks it copy-on-write
+  (``append``/``_cow_fork``): fresh block, device page copy, table
+  repoint — the other holders never observe the write. The engine's
+  admission keeps hits strictly below the first written position, so
+  the fork is a defensive invariant (property-tested), not a hot path.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Protocol, runtime_checkable
 
 import jax
@@ -41,18 +59,34 @@ from repro.models.cache import PagedLayout, is_paged_group
 
 
 class BlockAllocator:
-    """Free-list over ``n_blocks`` physical page indices. ``alloc`` is
-    all-or-nothing (None when short — callers must not partially admit);
-    ``free`` rejects double-frees and foreign indices."""
+    """Refcounted free-list over ``n_blocks`` physical page indices.
+    ``alloc`` is all-or-nothing (None when short — callers must not
+    partially admit) and hands out blocks at refcount 1; ``share`` adds
+    a reference to already-live blocks; ``release`` drops one reference
+    per block and returns the blocks that reached zero (rejecting
+    underflows and foreign indices). ``free`` is the historical alias
+    for ``release`` — for the single-reference blocks the non-sharing
+    engine deals in, they are the same operation."""
 
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free: list[int] = list(range(n_blocks))
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        """Distinct allocated blocks — each counted ONCE regardless of
+        how many references it carries, so ``n_free + n_live`` always
+        equals ``n_blocks`` (the conservation the property tests pin)."""
+        return len(self._ref)
+
+    def ref(self, block: int) -> int:
+        """Current reference count (0 for free/foreign blocks)."""
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> list[int] | None:
         if n < 0:
@@ -60,15 +94,35 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
-        self._used.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
-    def free(self, blocks) -> None:
+    def share(self, blocks) -> None:
+        """Add one reference to each of ``blocks`` (must be live)."""
         for b in blocks:
-            if b not in self._used:
+            if b not in self._ref:
+                raise ValueError(f"share of unallocated block {b}")
+        for b in blocks:
+            self._ref[b] += 1
+
+    def release(self, blocks) -> list[int]:
+        """Drop one reference per block; blocks reaching zero return to
+        the free list (and are reported back to the caller)."""
+        for b in blocks:
+            if b not in self._ref:
                 raise ValueError(f"free of unallocated block {b}")
-            self._used.discard(b)
-            self._free.append(b)
+        freed = []
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+    def free(self, blocks) -> None:
+        self.release(blocks)
 
 
 @runtime_checkable
@@ -78,12 +132,16 @@ class CacheBackend(Protocol):
     tree: Any
 
     def can_admit(self, n_tokens: int) -> bool:
-        """Would ``alloc`` for a ``n_tokens``-position sequence succeed?"""
+        """Could a ``n_tokens``-position reservation be satisfied once
+        every reclaimable block (deferred frees awaiting ``flush``,
+        evictable prefix-cache residents) is counted? A True here means
+        the engine should flush/evict and retry rather than stall."""
         ...
 
     def alloc(self, row: int, n_tokens: int) -> bool:
         """Reserve cache space covering ``n_tokens`` positions for
-        ``row``. False (and no side effects) when the budget is short."""
+        ``row``. False when the budget is short (the only side effect
+        permitted on failure is evicting unreferenced cached blocks)."""
         ...
 
     def append(self, row: int, n_tokens: int = 1) -> bool:
@@ -98,9 +156,11 @@ class CacheBackend(Protocol):
         """Make deferred frees effective (device table scrub included)."""
         ...
 
-    def insert(self, src_cache: Any, rows: list[int]) -> None:
+    def insert(self, src_cache: Any, rows: list[int],
+               offset: int = 0) -> None:
         """Scatter a prefill mini-cache (dense layout, one row per admitted
-        request) into the engine cache at ``rows``."""
+        request) into the engine cache at ``rows``, starting at position
+        ``offset`` (nonzero when a shared prefix already owns [0, offset))."""
         ...
 
     def view(self) -> Any:
@@ -137,7 +197,10 @@ class DenseCache:
     def flush(self) -> None:
         return None
 
-    def insert(self, src_cache: Any, rows: list[int]) -> None:
+    def insert(self, src_cache: Any, rows: list[int],
+               offset: int = 0) -> None:
+        if offset:
+            raise ValueError("DenseCache rows always start at position 0")
         key = ("insert", "dense")
         if key not in self._jits:
             axes = self._axes
@@ -176,12 +239,15 @@ _PAGE_PAIRS = (("k_pages", "k"), ("v_pages", "v"),
 
 
 class PagedCache:
-    """Block-table cache backend. Host state: a free-list allocator over
+    """Block-table cache backend. Host state: a refcounted allocator over
     the shared physical pages (ONE logical block spans every pageable
-    layer — per-layer tables are replicas) and per-row block lists."""
+    layer — per-layer tables are replicas), per-row block lists, and —
+    with ``prefix_cache`` — a content-hash index over full prompt blocks
+    plus an LRU of cache-only residents."""
 
     def __init__(self, tree: Any, n_rows: int, layout: PagedLayout,
-                 max_len: int, batch_axes: Any, jits: dict):
+                 max_len: int, batch_axes: Any, jits: dict,
+                 prefix_cache: bool = False):
         self.tree = tree
         self.n_rows = n_rows
         self.layout = layout
@@ -193,41 +259,146 @@ class PagedCache:
         self._tokens: list[int] = [0] * n_rows
         self._pending: list[int] = []          # rows freed, not yet scrubbed
         self._has_paged = _tree_has_paged_group(tree)
+        self.prefix_cache = prefix_cache
+        # content-hash index over full prompt blocks (both directions),
+        # and the LRU of blocks whose ONLY reference is the cache's own
+        # (oldest first — eviction order under admission pressure)
+        self._hash_to_block: dict[bytes, int] = {}
+        self._block_hash: dict[int, bytes] = {}
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self._hits: list[int] = [0] * n_rows   # prefix-hit tokens per row
 
     # -- accounting ----------------------------------------------------
     @property
     def n_live_blocks(self) -> int:
-        """Blocks currently reserved by rows (pending-free rows included
-        until ``flush`` returns theirs to the allocator). At every point
+        """Distinct blocks currently held — by rows (pending-free rows
+        included until ``flush``) or by the prefix index. At every point
         ``allocator.n_free + n_live_blocks == max_blocks`` — the exact
         conservation the chaos/cancellation tests assert."""
-        return sum(len(b) for b in self._blocks)
+        held = {b for blocks in self._blocks for b in blocks}
+        held.update(self._block_hash)
+        return len(held)
+
+    def hit_tokens(self, row: int) -> int:
+        """Prompt positions of ``row`` satisfied by prefix-cache hits."""
+        return self._hits[row]
+
+    @property
+    def n_cached_blocks(self) -> int:
+        """Prefix-indexed blocks currently resident (shared or LRU)."""
+        return len(self._block_hash)
 
     def _cap(self, n_tokens: int) -> int:
         return min(n_tokens, self.max_len)
 
     def can_admit(self, n_tokens: int) -> bool:
-        return (self.allocator.n_free >=
-                self.layout.n_blocks(self._cap(n_tokens)))
+        # count every RECLAIMABLE block, not just the free list: blocks
+        # parked behind a deferred free (rows in _pending) come back at
+        # the next flush, and cache-only LRU residents are evictable —
+        # only blocks held by live rows are truly unavailable
+        pending = set(self._pending)
+        held = {b for row, blocks in enumerate(self._blocks)
+                if blocks and row not in pending
+                for b in blocks}
+        return (self.layout.max_blocks - len(held)
+                >= self.layout.n_blocks(self._cap(n_tokens)))
 
-    def alloc(self, row: int, n_tokens: int) -> bool:
+    # -- prefix index ----------------------------------------------------
+    def peek_hit_blocks(self, block_hashes) -> list[int]:
+        """Longest indexed chain of leading prompt-block hashes. Purely
+        a lookup — callers must alloc before the index can change."""
+        hits: list[int] = []
+        for h in block_hashes:
+            b = self._hash_to_block.get(h)
+            if b is None:
+                break
+            hits.append(b)
+        return hits
+
+    def register_prefix(self, row: int, block_hashes) -> None:
+        """Index ``row``'s leading full prompt blocks by content hash.
+        The cache takes its OWN reference on each newly indexed block so
+        it outlives the row; hashes (or blocks) already indexed are
+        skipped — a duplicate prompt admitted in the same cold batch
+        keeps its private copy rather than aliasing after the fact."""
+        if not self.prefix_cache:
+            return
+        blocks = self._blocks[row]
+        for i, h in enumerate(block_hashes):
+            if i >= len(blocks):
+                break
+            b = blocks[i]
+            if h in self._hash_to_block or b in self._block_hash:
+                continue
+            self.allocator.share([b])
+            self._hash_to_block[h] = b
+            self._block_hash[b] = h
+
+    def _evict(self, block: int) -> None:
+        """Drop a cache-only resident: unindex and release the cache's
+        reference (pages need no scrub — no live table points here, and
+        attention never reads past a row's written positions)."""
+        self._lru.pop(block)
+        h = self._block_hash.pop(block)
+        del self._hash_to_block[h]
+        self.allocator.release([block])
+
+    def _reserve(self, n: int, protect=frozenset()) -> bool:
+        """Ensure ``n`` free blocks, evicting LRU residents (oldest
+        first, never one in ``protect``) before giving up."""
+        while self.allocator.n_free < n:
+            victim = next((b for b in self._lru if b not in protect), None)
+            if victim is None:
+                return False
+            self._evict(victim)
+        return True
+
+    # -- reservations ----------------------------------------------------
+    def alloc(self, row: int, n_tokens: int, block_hashes=()) -> bool:
+        """Reserve blocks covering ``n_tokens`` positions for ``row``.
+        With ``block_hashes`` (leading full prompt-block hashes), the
+        indexed prefix maps onto existing pages — the row SHARES them —
+        and only the remainder draws fresh blocks. On pressure, LRU
+        residents are evicted before refusing."""
         if self._blocks[row] or row in self._pending:
             raise ValueError(f"row {row} already holds a reservation")
-        blocks = self.allocator.alloc(
-            self.layout.n_blocks(self._cap(n_tokens)))
-        if blocks is None:
+        total = self.layout.n_blocks(self._cap(n_tokens))
+        hits = (self.peek_hit_blocks(block_hashes)[:total]
+                if self.prefix_cache else [])
+        if not self._reserve(total - len(hits), protect=set(hits)):
             return False
-        self._blocks[row] = blocks
+        fresh = self.allocator.alloc(total - len(hits))
+        if fresh is None:
+            return False
+        if hits:
+            self.allocator.share(hits)
+            for b in hits:
+                self._lru.pop(b, None)     # row-referenced: not evictable
+        self._blocks[row] = hits + fresh
         self._tokens[row] = self._cap(n_tokens)
+        self._hits[row] = len(hits) * self.layout.block_size
         return True
 
     def append(self, row: int, n_tokens: int = 1) -> bool:
-        new_total = self._tokens[row] + n_tokens
+        old = self._tokens[row]
+        new_total = old + n_tokens
         if new_total > self.max_len:
             return False
+        # copy-on-write: positions [old, new_total) land in logical
+        # blocks old//bs .. (new_total-1)//bs — fork any that are shared
+        # (refcount > 1: another row, or the prefix index) before writing
+        bs = self.layout.block_size
+        for idx in range(old // bs,
+                         min((new_total - 1) // bs + 1,
+                             len(self._blocks[row]))):
+            if (self.allocator.ref(self._blocks[row][idx]) > 1
+                    and not self._cow_fork(row, idx)):
+                return False
         need = (self.layout.n_blocks(new_total)
-                - self.layout.n_blocks(self._tokens[row]))
+                - self.layout.n_blocks(old))
         if need > 0:
+            if not self._reserve(need, protect=set(self._blocks[row])):
+                return False
             blocks = self.allocator.alloc(need)
             if blocks is None:
                 return False
@@ -236,6 +407,27 @@ class PagedCache:
             if self._has_paged:
                 self._write_table(row, start, blocks)
         self._tokens[row] = new_total
+        return True
+
+    def _cow_fork(self, row: int, idx: int) -> bool:
+        """Give ``row`` a private copy of its shared logical block
+        ``idx``: fresh block, device page copy, table repoint, then drop
+        the row's reference on the original."""
+        old = self._blocks[row][idx]
+        if not self._reserve(1, protect=set(self._blocks[row])):
+            return False
+        fresh = self.allocator.alloc(1)
+        if fresh is None:
+            return False
+        new = fresh[0]
+        if self._has_paged:
+            self.tree = self._copy_fn()(self.tree, jnp.int32(old),
+                                        jnp.int32(new))
+            self._write_table(row, idx, [new])
+        self._blocks[row][idx] = new
+        self.allocator.release([old])
+        if old in self._block_hash and self.allocator.ref(old) == 1:
+            self._lru[old] = None          # cache-only again: evictable
         return True
 
     def free(self, row: int) -> None:
@@ -257,9 +449,16 @@ class PagedCache:
             self.tree = self._clear_fn()(self.tree,
                                          jnp.asarray(rows, jnp.int32))
         for row in rows:
-            self.allocator.free(self._blocks[row])
+            self.allocator.release(self._blocks[row])
+            # indexed blocks survive on the cache's own reference; once
+            # that is the LAST one they become LRU-evictable
+            for b in self._blocks[row]:
+                if b in self._block_hash and self.allocator.ref(b) == 1:
+                    self._lru[b] = None
+                    self._lru.move_to_end(b)
             self._blocks[row] = []
             self._tokens[row] = 0
+            self._hits[row] = 0
 
     # -- device-tree transforms ----------------------------------------
     def _table_rows(self, rows: list[int]) -> np.ndarray:
@@ -290,6 +489,32 @@ class PagedCache:
                                       donate_argnums=(0,))
         return self._jits[key]
 
+    def _copy_fn(self):
+        """Physical page copy ``src -> dst`` across every pageable layer
+        (the device half of a copy-on-write fork)."""
+        key = ("paged_copy",)
+        if key not in self._jits:
+            def walk(t, src, dst):
+                if isinstance(t, dict) and is_paged_group(t):
+                    out = dict(t)
+                    for dk, _ in _PAGE_PAIRS:
+                        if dk not in t:
+                            continue
+                        pages = t[dk]
+                        sdims = pages.ndim - 4
+                        pf = pages.reshape((-1,) + pages.shape[sdims:])
+                        pf = pf.at[:, dst].set(pf[:, src])
+                        out[dk] = pf.reshape(pages.shape)
+                    return out
+                if isinstance(t, dict):
+                    return {k: walk(v, src, dst) for k, v in t.items()}
+                return t
+
+            self._jits[key] = jax.jit(
+                lambda tree, src, dst: walk(tree, src, dst),
+                donate_argnums=(0,))
+        return self._jits[key]
+
     def _write_table(self, row: int, start: int, blocks: list[int]) -> None:
         """Point logical block indices [start, start+len) of ``row`` at
         ``blocks`` on device (append path — admission goes via insert)."""
@@ -314,31 +539,77 @@ class PagedCache:
         self.tree = self._jits[key](self.tree, jnp.int32(row), idxs,
                                     jnp.asarray(blocks, jnp.int32))
 
-    def insert(self, src_cache: Any, rows: list[int]) -> None:
+    def gather_prefix(self, rows: list[int], n_tokens: int) -> Any:
+        """Read the first ``n_tokens`` cached positions of ``rows`` out
+        of the paged pool as dense per-group K/V — the attention context
+        a suffix prefill consumes. Pure read (no donation): call BEFORE
+        ``insert`` consumes the tree."""
+        key = ("paged_gather",)
+        if key not in self._jits:
+            bs = self.layout.block_size
+
+            def walk(t, table_rows, pos):
+                if isinstance(t, dict) and is_paged_group(t):
+                    out = {}
+                    for dk, sk in _PAGE_PAIRS:
+                        if dk not in t:
+                            continue
+                        pages = t[dk]
+                        sdims = pages.ndim - 4
+                        pf = pages.reshape((-1,) + pages.shape[sdims:])
+                        pp = table_rows[:, pos // bs]        # (n, H)
+                        g = pf[:, pp, pos % bs]   # (S, n, H, kv, hd)
+                        out[sk] = g.reshape(pages.shape[:sdims]
+                                            + g.shape[1:])
+                    return out
+                if isinstance(t, dict):
+                    return {k: walk(v, table_rows, pos)
+                            for k, v in t.items()}
+                return None
+
+            self._jits[key] = jax.jit(
+                lambda tree, table_rows, pos: walk(tree, table_rows, pos))
+        return self._jits[key](self.tree,
+                               jnp.asarray(self._table_rows(rows)),
+                               jnp.arange(n_tokens))
+
+    def insert(self, src_cache: Any, rows: list[int],
+               offset: int = 0) -> None:
         """Scatter the dense prefill mini-cache into the paged tree: every
         position of each source row lands at ``(table[p // bs], p % bs)``
         — positions beyond the row's reservation hit the scratch page, so
         bucket-padded prefill garbage goes to the sink, while live
-        positions are copied verbatim (the bit-parity guarantee)."""
+        positions are copied verbatim (the bit-parity guarantee). A
+        nonzero ``offset`` shifts the landing positions: the suffix path
+        writes residual K/V behind ``offset`` shared-prefix positions."""
         key = ("insert", "paged")
         if key not in self._jits:
             axes = self._axes
+            scratch = self.layout.scratch_page
 
-            def group_ins(dst, src, rows_, table_rows):
+            def group_ins(dst, src, rows_, table_rows, offset_):
                 out = dict(dst)
                 table = dst["table"]
                 sdims = table.ndim - 2
                 tf = table.reshape((-1,) + table.shape[sdims:])
                 tf = tf.at[:, rows_, :].set(table_rows[None])
                 out["table"] = tf.reshape(table.shape)
+                nblk = table_rows.shape[1]
                 for dk, sk in _PAGE_PAIRS:
                     if dk not in dst:
                         continue
                     pages, s = dst[dk], src[sk]
                     bs = pages.shape[sdims + 1]
                     W = s.shape[sdims + 1]
-                    pos = jnp.arange(W)
-                    pp = table_rows[:, pos // bs]            # (n, W)
+                    pos = jnp.arange(W) + offset_
+                    bi = pos // bs
+                    # offset + bucket padding can run past the table:
+                    # clamp those positions to the scratch sink (jax
+                    # would silently clamp the gather to the LAST table
+                    # entry — a live block — instead)
+                    pp = jnp.where(bi[None, :] < nblk,
+                                   table_rows[:, jnp.minimum(bi, nblk - 1)],
+                                   scratch)
                     off = jnp.broadcast_to(pos % bs, pp.shape)
                     pf = pages.reshape((-1,) + pages.shape[sdims:])
                     sf = s.astype(pages.dtype).reshape(
@@ -348,12 +619,12 @@ class PagedCache:
                     out[dk] = scat.reshape(pages.shape)
                 return out
 
-            def walk(dst, src, ax, rows_, table_rows):
+            def walk(dst, src, ax, rows_, table_rows, offset_):
                 if isinstance(dst, dict) and is_paged_group(dst):
-                    return group_ins(dst, src, rows_, table_rows)
+                    return group_ins(dst, src, rows_, table_rows, offset_)
                 if isinstance(dst, dict):
                     return {k: walk(dst[k], src[k], ax[k], rows_,
-                                    table_rows) for k in dst}
+                                    table_rows, offset_) for k in dst}
                 if ax is None:
                     return dst
                 em = jnp.moveaxis(dst, ax, 0)
@@ -361,12 +632,13 @@ class PagedCache:
                 return jnp.moveaxis(em.at[rows_].set(sm), 0, ax)
 
             self._jits[key] = jax.jit(
-                lambda tree, src, rows_, table_rows:
-                    walk(tree, src, axes, rows_, table_rows),
+                lambda tree, src, rows_, table_rows, offset_:
+                    walk(tree, src, axes, rows_, table_rows, offset_),
                 donate_argnums=(0,))
         self.tree = self._jits[key](self.tree, src_cache,
                                     jnp.asarray(rows, jnp.int32),
-                                    jnp.asarray(self._table_rows(rows)))
+                                    jnp.asarray(self._table_rows(rows)),
+                                    jnp.int32(offset))
 
     def view(self) -> Any:
         return self.tree

@@ -69,6 +69,7 @@ method end-to-end.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 import warnings
 import weakref
@@ -106,6 +107,10 @@ class Completion:
     tokens: list
     prompt_len: int
     latency_s: float = 0.0
+    # prompt positions satisfied by prefix-cache hits (0 without
+    # prefix_cache): the Router aggregates these into WindowStats so the
+    # scheduler observes the EFFECTIVE post-hit prefill load
+    prefix_hit_tokens: int = 0
 
 
 # THE prompt-length bucket table. The engine's padded batch admission and
@@ -147,6 +152,13 @@ class EngineConfig:
     block_size: int = 16
     max_blocks: int | None = None
     max_seqs: int | None = None
+    # prefix sharing (paged only): index full prompt blocks by content
+    # hash, map new requests' leading blocks onto cache hits (copy-on-
+    # write), and prefill only the residual suffix. Architectures the
+    # suffix path can't serve bit-exactly (SSM/hybrid state, sliding
+    # windows, MLA latents, int8 pages, non-rope positions) silently
+    # degrade to no sharing — outputs stay identical either way.
+    prefix_cache: bool = False
     dtype: Any = jnp.float32
     greedy: bool = True
     seed: int = 0
@@ -163,6 +175,9 @@ class EngineConfig:
                 f"max_len={self.max_len} must be a multiple of "
                 f"block_size={self.block_size} (a sequence's logical "
                 "blocks must tile the horizon exactly)")
+        if self.prefix_cache and self.cache != "paged":
+            raise ValueError("prefix_cache requires cache='paged' (hits "
+                             "are shared physical pages)")
 
     @property
     def resolved_max_blocks(self) -> int:
@@ -192,6 +207,7 @@ class _Slot:
     generated: list = dataclasses.field(default_factory=list)
     started: float = 0.0          # perf_counter stamp (monotonic)
     deadline: float | None = None  # absolute perf_counter expiry stamp
+    hit_tokens: int = 0           # prefix-cache hit positions (sharing)
 
 
 # jitted executables shared by every engine built on the same Model —
@@ -301,9 +317,22 @@ class ServingEngine:
             lambda a, b: next((i for i, (x, y) in
                                enumerate(zip(a.shape, b.shape)) if x != y),
                               None), one, two)
+        # prefix-sharing eligibility: the suffix-prefill path is bit-exact
+        # only for full-horizon rope GQA over all-paged groups — SSM /
+        # hybrid state, sliding windows (gemma locals, mixtral), MLA
+        # latents, int8 pages and learned positions (whisper) fall back
+        # to the plain paged path (hit_tokens stays 0, outputs identical)
+        cfg = model.cfg
+        self._share = (self.paged and config.prefix_cache
+                       and model.fam in ("dense", "moe")
+                       and not cfg.mla
+                       and cfg.sliding_window == 0
+                       and cfg.kv_cache_dtype != "int8"
+                       and cfg.pos_embed == "rope")
         if self.paged:
             self.cache_backend = PagedCache(tree, n_rows, layout, ml,
-                                            self._batch_axes, self._jits)
+                                            self._batch_axes, self._jits,
+                                            prefix_cache=self._share)
         else:
             self.cache_backend = DenseCache(tree, n_rows,
                                             self._batch_axes, self._jits)
@@ -311,6 +340,8 @@ class ServingEngine:
         self.steps = 0                # step() calls that found work
         self.chunks = 0               # fused decode chunks dispatched
         self.tokens_generated = 0     # tokens emitted (prefill + decode)
+        self.prefill_tokens_executed = 0  # real positions run in prefill
+        self.prefix_hit_tokens_total = 0  # positions served from hits
         self.busy_s = 0.0             # wall time spent inside step()
         self.peak_active = 0          # max concurrently active rows seen
         self.budget_exhausted = False  # last run() hit max_steps with work
@@ -382,6 +413,23 @@ class ServingEngine:
             self._jits[key] = jax.jit(fn)
         return self._jits[key]
 
+    def _suffix_prefill_fn(self, n_seqs: int, bl: int, offset: int):
+        """Residual-suffix prefill executable: ``offset`` is static (it
+        fixes the rope positions and the context width), ``bl`` is the
+        PROMPT_BUCKETS-padded suffix width — suffix shapes reuse the same
+        bucket table as full prefill, so compiled-shape count stays
+        bounded."""
+        key = ("prefill_sfx", n_seqs, bl, offset, self.max_len)
+        if key not in self._jits:
+            m = self.model
+
+            def fn(params, batch, ctx, logits_idx):
+                cache = m.init_cache(n_seqs, bl)
+                return m.prefill_suffix(params, batch, cache, ctx, offset,
+                                        logits_at=logits_idx)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
+
     def _chunk_fn(self, n_tokens: int):
         """Fused decode executable for a chunk of ``n_tokens`` steps; the
         engine cache is donated (arg 1), so the KV rings update in place."""
@@ -441,6 +489,61 @@ class ServingEngine:
         nv = self.model.cfg.n_vision_tokens or 0
         return min(nv + len(req.prompt) + req.max_new_tokens, self.max_len)
 
+    def _block_hashes(self, req: Request) -> list[bytes]:
+        """Content hash per FULL prompt block: a chained blake2b over
+        (vision-token count, extras, then each block's token ids), so a
+        block hash commits to everything at and before it — equal hashes
+        imply bit-identical cached K/V (prefill K/V is batch- and
+        padding-invariant; the parity tests pin this)."""
+        bs = self.config.block_size
+        nv = self.model.cfg.n_vision_tokens or 0
+        W = nv + len(req.prompt)
+        seed = hashlib.blake2b(digest_size=16)
+        seed.update(np.int64(nv).tobytes())
+        for k in sorted(req.extras):
+            seed.update(k.encode())
+            seed.update(np.ascontiguousarray(
+                np.asarray(req.extras[k])).tobytes())
+        prev = seed.digest()
+        prompt = np.ascontiguousarray(np.asarray(req.prompt), np.int32)
+        out: list[bytes] = []
+        for i in range(W // bs):
+            hh = hashlib.blake2b(prev, digest_size=16)
+            hh.update(prompt[max(i * bs - nv, 0):
+                             max((i + 1) * bs - nv, 0)].tobytes())
+            prev = hh.digest()
+            out.append(prev)
+        return out
+
+    def _peek_plan(self, req: Request):
+        """Sharing plan for one request: ``(H, hit_hashes, full_hashes)``
+        where ``H`` is the prefix-hit token count. Capped one block below
+        the prompt end (at least one residual token must run so the
+        prefill sample exists) and zeroed when the hit would not cover
+        the vision prefix (the suffix embed path is text-only)."""
+        bs = self.config.block_size
+        nv = self.model.cfg.n_vision_tokens or 0
+        W = nv + len(req.prompt)
+        full = self._block_hashes(req)
+        hits = self.cache_backend.peek_hit_blocks(full)
+        H = min(len(hits), (W - 1) // bs) * bs
+        if H < nv:
+            H = 0
+        return H, full[:H // bs], full
+
+    def _key_for(self, req: Request, plan):
+        """Paged admit key: requests batch into one prefill dispatch only
+        when their padded width matches — for prefix hits that is the
+        SUFFIX bucket, and the hit length H is folded in so every row of
+        a suffix batch shares one context width and rope offset (logits
+        are batch-size-sensitive at the last ulp, so hit and miss
+        requests must not share a dispatch)."""
+        if plan is None or plan[0] == 0:
+            return self._admit_key(req)
+        nv = self.model.cfg.n_vision_tokens or 0
+        n_sfx = nv + len(req.prompt) - plan[0]
+        return (_bucket(n_sfx), tuple(sorted(req.extras)), plan[0])
+
     def _admit_paged(self) -> None:
         """Block-budget admission, strict FIFO and bucket-barrier-free:
         pop the queue head while a free row AND enough free blocks exist,
@@ -449,50 +552,106 @@ class ServingEngine:
         COMPUTE-only; cache memory is reserved at the request's real
         token count, so ragged prompts pay no cache padding). A head that
         does not fit stops admission — no scanning past it for smaller
-        requests, so nothing starves."""
+        requests, so nothing starves.
+
+        A failed reservation only ends the round once no deferred free is
+        left to reclaim: rows released DURING the round (an instant
+        finish inside ``_admit_batch``, a racing cancel) park blocks in
+        the backend's pending list, and refusing while those are
+        reclaimable would stall admission a whole macro-step on a pool
+        that actually has room (the ``can_admit`` deferred-free bug)."""
         cb = self.cache_backend
         cb.flush()   # scrub freed rows' tables, reclaim their blocks
         free = [i for i, s in enumerate(self.slots) if not s.active]
-        blocked = False
-        while free and self.queue and not blocked:
-            key = self._admit_key(self.queue[0])
+        while free and self.queue:
+            head_plan = self._peek_plan(self.queue[0]) if self._share \
+                else None
+            key = self._key_for(self.queue[0], head_plan)
             take: list[Request] = []
             slot_ids: list[int] = []
+            plans: list = []
+            blocked: bool | str = False
             limit = len(free) if self.batch_admit else 1
             while self.queue and free and len(take) < limit:
                 req = self.queue[0]
-                if self._admit_key(req) != key:
+                plan = self._peek_plan(req) if self._share else None
+                if self._key_for(req, plan) != key:
                     break
                 if self.fault is not None and self.fault.refuse_alloc():
-                    blocked = True       # injected pool exhaustion
+                    blocked = "fault"    # injected pool exhaustion
                     break
-                if not cb.alloc(free[0], self._cache_tokens(req)):
+                hashes = plan[1] if plan is not None else ()
+                if not cb.alloc(free[0], self._cache_tokens(req),
+                                block_hashes=hashes):
                     blocked = True
                     break
                 slot_ids.append(free.pop(0))
                 take.append(self.queue.popleft())
-            if not take:
-                break
-            self._admit_batch(slot_ids, take)
+                plans.append(plan)
+            if take:
+                self._admit_batch(slot_ids, take, plans)
+            if blocked == "fault":
+                return
+            if blocked and not cb._pending:
+                # genuinely exhausted: FIFO holds the head until a real
+                # completion frees blocks
+                return
+            if not take and not blocked:
+                return
+            # an instant finish inside _admit_batch parks its row in the
+            # backend's pending list; flush so the recomputed free list
+            # only offers rows whose reservation is actually released
+            if cb._pending:
+                cb.flush()
+            free = [i for i, s in enumerate(self.slots) if not s.active]
 
-    def _admit_batch(self, slot_ids: list[int],
-                     reqs: list[Request]) -> None:
+    def _admit_batch(self, slot_ids: list[int], reqs: list[Request],
+                     plans: list | None = None) -> None:
         n = len(reqs)
-        bl, _ = self._admit_key(reqs[0])
         nv = self.model.cfg.n_vision_tokens or 0
-        padded = np.zeros((n, bl), np.int32)
-        logits_idx = np.zeros((n,), np.int32)
-        for j, r in enumerate(reqs):
-            plen = len(r.prompt)
-            padded[j, :plen] = r.prompt       # right-pad into the bucket
-            logits_idx[j] = nv + plen - 1
-        batch = {"tokens": jnp.asarray(padded)}
-        for k in reqs[0].extras:
-            batch[k] = jnp.asarray(np.stack([np.asarray(r.extras[k])
-                                             for r in reqs]))
-        logits, src_cache = self._prefill_fn(n, bl)(
-            self.params, batch, jnp.asarray(logits_idx))
-        self._insert_rows(src_cache, slot_ids)
+        H = plans[0][0] if plans and plans[0] is not None else 0
+        if H:
+            # residual-suffix prefill: every row shares hit length H (in
+            # the admit key), so one gathered context of width exactly H
+            # serves the batch. Gather BEFORE insert — insert donates the
+            # tree the gather reads.
+            bl = _bucket(nv + len(reqs[0].prompt) - H)
+            padded = np.zeros((n, bl), np.int32)
+            logits_idx = np.zeros((n,), np.int32)
+            for j, r in enumerate(reqs):
+                sfx = np.asarray(r.prompt)[H - nv:]
+                padded[j, :len(sfx)] = sfx
+                logits_idx[j] = len(sfx) - 1
+            batch = {"tokens": jnp.asarray(padded)}
+            ctx = self.cache_backend.gather_prefix(slot_ids, H)
+            logits, src_cache = self._suffix_prefill_fn(n, bl, H)(
+                self.params, batch, ctx, jnp.asarray(logits_idx))
+            self.cache_backend.insert(src_cache, slot_ids, offset=H)
+            self.prefill_tokens_executed += sum(
+                nv + len(r.prompt) - H for r in reqs)
+            self.prefix_hit_tokens_total += n * H
+        else:
+            bl, _ = self._admit_key(reqs[0])
+            padded = np.zeros((n, bl), np.int32)
+            logits_idx = np.zeros((n,), np.int32)
+            for j, r in enumerate(reqs):
+                plen = len(r.prompt)
+                padded[j, :plen] = r.prompt   # right-pad into the bucket
+                logits_idx[j] = nv + plen - 1
+            batch = {"tokens": jnp.asarray(padded)}
+            for k in reqs[0].extras:
+                batch[k] = jnp.asarray(np.stack([np.asarray(r.extras[k])
+                                                 for r in reqs]))
+            logits, src_cache = self._prefill_fn(n, bl)(
+                self.params, batch, jnp.asarray(logits_idx))
+            self._insert_rows(src_cache, slot_ids)
+            self.prefill_tokens_executed += sum(
+                nv + len(r.prompt) for r in reqs)
+        if self._share and plans:
+            # index the new rows' full prompt blocks (hit rows extend the
+            # chain past their hit; already-indexed hashes are skipped)
+            for i, pl in zip(slot_ids, plans):
+                self.cache_backend.register_prefix(i, pl[2])
         first = self._pick(logits)
         now = time.perf_counter()
         for j, (i, r) in enumerate(zip(slot_ids, reqs)):
@@ -505,6 +664,7 @@ class ServingEngine:
             slot.generated = [int(first[j])]
             slot.started = now
             slot.deadline = self._deadline_abs.pop(r.rid, None)
+            slot.hit_tokens = H
             self.tokens_generated += 1
             # the prefill sample is the request's first streamed chunk —
             # its arrival is the time-to-first-chunk the Router windows
@@ -569,7 +729,8 @@ class ServingEngine:
         # prompt_len recorded at admission: s.pos here is prompt length
         # PLUS generated tokens (plus n_vision_tokens), not the prompt
         now = time.perf_counter()
-        comp = Completion(s.rid, s.generated, s.prompt_len, now - s.started)
+        comp = Completion(s.rid, s.generated, s.prompt_len, now - s.started,
+                          prefix_hit_tokens=s.hit_tokens)
         self.done.append(comp)
         self._emit_done(comp, now)
         # release the row's cache reservation (paged: deferred until the

@@ -114,6 +114,8 @@ class WindowStats:
     n_retries: int = 0            # re-dispatches after container failures
     n_failed: int = 0             # terminal FailedEvents in the window
     n_shed: int = 0               # admission rejections in the window
+    prefix_hit_tokens: int = 0    # prompt tokens served from the prefix
+                                  # cache instead of prefill (paged only)
 
 
 class CompletionHandle:
@@ -210,7 +212,8 @@ class Router:
                  request_deadline_s: float | None = None,
                  deadline_grace_s: float = 0.5,
                  max_queue: int | None = None,
-                 shed_p95_s: float | None = None):
+                 shed_p95_s: float | None = None,
+                 shed_window_s: float = 30.0):
         if backend is None and backend_factory is None:
             raise ValueError("need a backend or a backend_factory")
         self.energy = energy or EnergyProxy()
@@ -226,6 +229,7 @@ class Router:
         self.deadline_grace_s = deadline_grace_s
         self.max_queue = max_queue
         self.shed_p95_s = shed_p95_s
+        self.shed_window_s = shed_window_s
         self._factory = backend_factory
         self._backends: dict[int, Any] = {}
         if backend_factory is not None:
@@ -256,8 +260,11 @@ class Router:
         self.failed_total = 0
         self.shed_total = 0
         # always-on ttfc tail sample for the shed threshold (the window
-        # accumulators only run under a scheduler)
-        self._recent_ttfc: deque[float] = deque(maxlen=64)
+        # accumulators only run under a scheduler). Entries are
+        # (stamp, seconds) so the shed check can age out samples older
+        # than shed_window_s — a p95 frozen on a past spike would keep
+        # shedding forever after the overload drains
+        self._recent_ttfc: deque[tuple[float, float]] = deque(maxlen=64)
         self._target_n: int | None = None    # resize awaiting a drain
         self._new_window()
 
@@ -309,16 +316,30 @@ class Router:
         self._cid_buckets[cid][bucket] += 1
         return cid
 
+    def note_ttfc(self, seconds: float, at: float | None = None) -> None:
+        """Record one time-to-first-chunk sample for the shed-threshold
+        p95 (stamped now unless ``at`` is given — tests inject history
+        through here rather than poking the deque's tuple layout)."""
+        self._recent_ttfc.append(
+            (time.perf_counter() if at is None else at, seconds))
+
     def _shed_reason(self) -> str | None:
         if (self.max_queue is not None
                 and len(self._handles) >= self.max_queue):
             return (f"queue full: {len(self._handles)} in flight >= "
                     f"max_queue={self.max_queue}")
-        if self.shed_p95_s is not None and len(self._recent_ttfc) >= 8:
-            _, p95 = percentiles(list(self._recent_ttfc))
-            if p95 > self.shed_p95_s:
-                return (f"ttfc p95 {p95:.3f}s over shed threshold "
-                        f"{self.shed_p95_s:g}s")
+        if self.shed_p95_s is not None:
+            # age out stale samples FIRST: a ttfc spike must stop
+            # tripping the threshold once it leaves the window, or one
+            # past burst sheds traffic forever after recovery
+            horizon = time.perf_counter() - self.shed_window_s
+            while self._recent_ttfc and self._recent_ttfc[0][0] < horizon:
+                self._recent_ttfc.popleft()
+            if len(self._recent_ttfc) >= 8:
+                _, p95 = percentiles([v for _, v in self._recent_ttfc])
+                if p95 > self.shed_p95_s:
+                    return (f"ttfc p95 {p95:.3f}s over shed threshold "
+                            f"{self.shed_p95_s:g}s")
         return None
 
     def _retry_after_hint(self) -> float:
@@ -391,10 +412,19 @@ class Router:
             handle = self._handles.get(ev.rid)
             if handle is None:          # stale event for a dropped handle
                 continue
+            cid = getattr(ev, "container_id", None)
+            if cid is not None and cid != self._rid_cid.get(ev.rid):
+                # stale event from an abandoned incarnation: the request
+                # was re-dispatched elsewhere after a container failure,
+                # and the old container's late chunks/terminals must not
+                # leak into the retried stream (a stale DoneEvent would
+                # even pop the router backstop while the live incarnation
+                # is still running)
+                continue
             handle._pending.append(ev)
             if isinstance(ev, ChunkEvent) and handle.ttfc_s is None:
                 handle.ttfc_s = now - self._submit_t[ev.rid]
-                self._recent_ttfc.append(handle.ttfc_s)
+                self.note_ttfc(handle.ttfc_s, at=now)
             elif isinstance(ev, DoneEvent):
                 self._on_done(handle, ev)
             elif isinstance(ev, FailedEvent):
@@ -506,6 +536,13 @@ class Router:
                 continue
             self._rid_cid[rid] = cid
             handle.container_id = cid
+            if deadline_abs is not None:
+                # re-arm the router backstop for the new incarnation: the
+                # first incarnation's terminal may already have popped
+                # _deadline_abs, and a retry onto a reply-dropping
+                # container would otherwise hang with only the engine's
+                # (unreachable) expiry guarding it
+                self._deadline_abs[rid] = deadline_abs
             self.retry_total += 1
             self._window_retries += 1
             handle._pending.append(RetryEvent(
@@ -597,7 +634,9 @@ class Router:
             len(self.history), n, wall, energy_j, len(self._window_done),
             toks, toks / wall if wall > 0 else 0.0, ttfc50, ttfc95,
             lat50, lat95, n_retries=self._window_retries,
-            n_failed=self._window_failed, n_shed=self._window_shed))
+            n_failed=self._window_failed, n_shed=self._window_shed,
+            prefix_hit_tokens=sum(getattr(c, "prefix_hit_tokens", 0)
+                                  for c in self._window_done)))
         assert self.scheduler is not None
         self.scheduler.observe(n, wall, energy_j)
         if repick:

@@ -145,3 +145,108 @@ def test_double_and_foreign_free_raise(n_blocks, n):
     with pytest.raises(ValueError):
         a.free([n_blocks + 7])
     assert a.n_free == n_blocks
+
+
+# -- prefix sharing: share/release/cow-fork/evict interleavings --------------
+#
+# With prefix_cache on, a block can be referenced by several rows AND the
+# cache's own index at once; releases come from row frees (flush), CoW
+# forks (append into a shared block) and LRU eviction (admission
+# pressure). The refcount-aware conservation the engine relies on:
+# free + DISTINCT live == pool at every step, the allocator's refcount of
+# every block equals exactly (#rows holding it, pending included) +
+# (1 if indexed), the LRU holds only index-only residents, and a
+# successful append leaves every written block privately owned (ref 1) —
+# no aliasing between live rows through a written block.
+
+def _hashes(seq):
+    """Stand-in block-hash chain: prefix tuples, so equal leading content
+    collides exactly like the engine's chained blake2b does."""
+    return [tuple(seq[:i + 1]) for i in range(len(seq))]
+
+
+@given(st.integers(1, 6),                        # rows
+       st.integers(1, 4),                        # block_size
+       st.integers(2, 16),                       # max_blocks
+       st.lists(st.tuples(st.sampled_from(["admit", "register", "grow",
+                                           "release", "flush"]),
+                          st.integers(0, 5),     # row
+                          st.lists(st.integers(0, 2), min_size=1,
+                                   max_size=5),  # block-content ids
+                          st.integers(0, 3)),    # tail tokens / grow len
+                max_size=50),
+       st.randoms())
+@settings(max_examples=150, deadline=None)
+def test_share_cow_evict_interleavings_conserve_refcounts(
+        n_rows, block_size, max_blocks, ops, rnd):
+    layout = PagedLayout(block_size=block_size, max_blocks=max_blocks)
+    max_len = block_size * max_blocks
+    cache = PagedCache(tree={}, n_rows=n_rows, layout=layout,
+                       max_len=max_len, batch_axes=None, jits={},
+                       prefix_cache=True)
+    chains: dict[int, list] = {}                 # row -> its hash chain
+
+    def check():
+        assert (cache.allocator.n_free + cache.n_live_blocks
+                == max_blocks), "leaked or double-freed blocks"
+        assert cache.allocator.n_live == cache.n_live_blocks
+        refs: dict[int, int] = {}
+        for blocks in cache._blocks:
+            for b in blocks:
+                refs[b] = refs.get(b, 0) + 1
+        for b in cache._block_hash:
+            refs[b] = refs.get(b, 0) + 1
+        for b, want in refs.items():
+            assert cache.allocator.ref(b) == want, "refcount drift"
+        assert cache.allocator._ref.keys() == refs.keys()
+        for b in cache._lru:                     # LRU ⊆ index-only blocks
+            assert b in cache._block_hash
+            assert cache.allocator.ref(b) == 1
+        # the two index directions stay exact inverses
+        assert ({h: b for b, h in cache._block_hash.items()}
+                == cache._hash_to_block)
+
+    for op, row, content, extra in ops:
+        row %= n_rows
+        if op == "admit" and not cache._blocks[row] \
+                and row not in cache._pending:
+            n_tokens = min(len(content) * block_size + extra, max_len)
+            if n_tokens and cache.alloc(row, n_tokens,
+                                        block_hashes=_hashes(content)):
+                chains[row] = _hashes(content)
+        elif op == "register" and cache._blocks[row] \
+                and row not in cache._pending and row in chains:
+            cache.register_prefix(row, chains[row])
+        elif op == "grow" and cache._blocks[row] \
+                and row not in cache._pending:
+            if cache.append(row, extra + 1):
+                # every block the write landed in must now be PRIVATE:
+                # refcount 1 and unindexed (CoW forked it away from any
+                # other row / the prefix index before the write)
+                bs = block_size
+                old = cache._tokens[row] - (extra + 1)
+                for idx in range(old // bs,
+                                 min((cache._tokens[row] - 1) // bs + 1,
+                                     len(cache._blocks[row]))):
+                    b = cache._blocks[row][idx]
+                    assert cache.allocator.ref(b) == 1, \
+                        "append left a written block shared"
+                    assert b not in cache._block_hash
+        elif op == "release":
+            for _ in range(rnd.randint(1, 2)):   # racing releases
+                cache.free(row)
+        elif op == "flush":
+            cache.flush()
+        check()
+    cache.flush()
+    for row in range(n_rows):
+        cache.free(row)
+    cache.flush()
+    check()
+    # drain the index too: once every row is gone, every indexed block
+    # is an LRU resident, and evicting them all restores the full pool
+    for b in list(cache._lru):
+        cache._evict(b)
+    assert cache.n_cached_blocks == 0
+    assert cache.allocator.n_free == max_blocks
+    assert cache.n_live_blocks == 0

@@ -24,8 +24,9 @@ import time
 import numpy as np
 import pytest
 
-from repro.serving import (DoneEvent, EngineConfig, FailedEvent, Fault,
-                           FaultPlan, RejectedEvent, Request, RequestFailed,
+from repro.serving import (Completion, ContainerFailure, DoneEvent,
+                           EngineConfig, FailedEvent, Fault, FaultPlan,
+                           RejectedEvent, Request, RequestFailed,
                            RequestRejected, RetryEvent, Router)
 from repro.serving.backend import ProcessBackend, ThreadBackend
 from repro.serving.engine import ServingEngine
@@ -246,7 +247,11 @@ def test_mid_decode_deadline_frees_slot(reduced_models):
     cfg = model.cfg
     backend = ThreadBackend(model, params, 1, n_slots_per_container=2,
                             max_len=64)
-    with Router(backend) as router:
+    # a huge grace keeps the router backstop out of the race: the first
+    # step (admit + compile) can exceed deadline+grace on a cold process,
+    # and the backstop would then cancel before the ENGINE's own expiry —
+    # the path under test here — ever gets to emit its typed failure
+    with Router(backend, deadline_grace_s=60.0) as router:
         h = router.submit(Request(rid=0,
                                   prompt=np.arange(6, dtype=np.int32),
                                   max_new_tokens=500, deadline_s=0.35))
@@ -314,11 +319,99 @@ def test_shed_p95_threshold_sheds_under_slow_ttfc(reduced_models):
     backend = ThreadBackend(model, params, 1, n_slots_per_container=2,
                             max_len=64)
     with Router(backend, shed_p95_s=0.5) as router:
-        router._recent_ttfc.extend([2.0] * 16)   # observed slow tail
+        for _ in range(16):                      # observed slow tail
+            router.note_ttfc(2.0)
         h = router.submit(_requests(model.cfg, [(6, 2)], seed=23)[0])
         with pytest.raises(RequestRejected, match="shed threshold"):
             h.result()
         assert router.shed_total == 1
+
+
+def test_shed_p95_recovers_once_spike_leaves_window(reduced_models):
+    """Burst → drain → admitted again: the shed-threshold ttfc sample is
+    bounded by time, so a past overload spike stops tripping
+    ``shed_p95_s`` once it ages past ``shed_window_s``. Pre-fix the
+    sample never aged out and one burst shed traffic forever."""
+    model, params = reduced_models["qwen3-0.6b"]
+    backend = ThreadBackend(model, params, 1, n_slots_per_container=2,
+                            max_len=64)
+    with Router(backend, shed_p95_s=0.5, shed_window_s=0.25) as router:
+        for _ in range(16):                 # the burst's slow tail
+            router.note_ttfc(2.0)
+        shed = router.submit(_requests(model.cfg, [(6, 2)], seed=23)[0])
+        with pytest.raises(RequestRejected, match="shed threshold"):
+            shed.result()
+        assert router.shed_total == 1
+        time.sleep(0.3)                     # spike leaves the window
+        ok = router.submit(Request(rid=50, prompt=np.arange(
+            6, dtype=np.int32), max_new_tokens=2))
+        assert len(ok.tokens()) == 2        # admitted and served
+        assert router.shed_total == 1
+
+
+# ---------------------------------------------------------------------------
+# stale events from abandoned incarnations (scripted structural backend)
+# ---------------------------------------------------------------------------
+class _ScriptedBackend:
+    """Structural backend replaying a poll() tape: stages the
+    cross-incarnation races (a stale terminal arriving AFTER the request
+    was re-homed by a retry) that real backends only produce under
+    timing-dependent chaos. ``loads`` steer ``Router._dispatch``."""
+
+    def __init__(self, capacity, tape):
+        self.capacity = capacity
+        self._tape = list(tape)
+        self.submitted: list[tuple[int, int]] = []
+        self._load = [0] * capacity
+
+    def submit(self, cid, req):
+        self.submitted.append((cid, req.rid))
+        self._load[cid] += 1
+
+    def poll(self):
+        return self._tape.pop(0) if self._tape else []
+
+    def load(self, cid):
+        return self._load[cid]
+
+    def stats(self, cid):
+        return (0.0, 0)
+
+    def cancel(self, cid, rid):
+        pass
+
+    def close(self):
+        pass
+
+
+def test_stale_terminal_after_retry_is_ignored_and_backstop_fires():
+    """A request retried off a hung container must not be terminated by
+    the old incarnation's late DoneEvent (wrong tokens, and it would pop
+    the router backstop while the live incarnation still runs). With the
+    new home silent, the re-armed backstop is what ends it — typed."""
+    req = Request(rid=7, prompt=np.arange(6, dtype=np.int32),
+                  max_new_tokens=4, deadline_s=0.2)
+    stale = DoneEvent(7, 0, Completion(7, [1, 2, 3, 4], 6, 0.01), 0.0)
+    tape = [
+        [ContainerFailure(0, "hung", "heartbeat timeout", 0.0,
+                          lost_rids=(7,))],
+        [stale],                       # container 0 wakes up too late
+    ]
+    backend = _ScriptedBackend(2, tape)
+    with Router(backend, deadline_grace_s=0.1, max_retries=2) as router:
+        h = router.submit(req)
+        assert backend.submitted == [(0, 7)]
+        router.poll()                  # failure -> retry, re-homed to c1
+        assert backend.submitted[-1] == (1, 7)
+        router.poll()                  # stale DoneEvent from container 0
+        assert h.completion is None, (
+            "aborted incarnation's completion leaked into the retried "
+            "stream")
+        with pytest.raises(RequestFailed) as ei:
+            h.result()                 # c1 stays silent: backstop fires
+        assert ei.value.event.kind == "deadline"
+        assert "backstop" in ei.value.event.reason
+        assert h.attempts == 1
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +496,38 @@ def test_process_drop_replies_caught_by_deadline_backstop(reduced_models):
         assert ei.value.event.kind == "deadline"
         assert "backstop" in ei.value.event.reason
         assert time.perf_counter() - t0 < 60
+    for p in mp.active_children():
+        p.join(timeout=10)
+    assert mp.active_children() == []
+
+
+@pytest.mark.slow
+def test_process_retry_onto_drop_replies_hits_backstop(reduced_models):
+    """Kill the first incarnation's container so the request is retried
+    onto a container that silently drops every reply: the router-side
+    backstop must stay armed across the re-dispatch and end the retried
+    incarnation typed — never a hang."""
+    model, params = reduced_models["qwen3-0.6b"]
+    cfg = model.cfg
+    plan = FaultPlan((Fault("kill", container_id=0, after_steps=1),
+                      Fault("drop_replies", container_id=1, count=-1)))
+    backend = ProcessBackend(cfg, 2, n_slots_per_container=2, max_len=64,
+                             params_seed=0, allow_shared_cores=True,
+                             chunk_tokens=1, fault_plan=plan,
+                             max_respawns=0)
+    # the deadline must outlive child spawn + prefill compile + the kill
+    # -> retry hop, or the backstop fires on the FIRST incarnation and
+    # the test stops exercising the re-dispatch path it is pinning
+    with Router(backend, request_deadline_s=30.0, deadline_grace_s=1.0,
+                max_retries=2) as router:
+        h = router.submit(_requests(cfg, [(6, 400)], seed=41)[0])
+        t0 = time.perf_counter()
+        with pytest.raises(RequestFailed) as ei:
+            h.result()
+        assert h.attempts == 1                   # it WAS re-dispatched
+        assert ei.value.event.kind == "deadline"
+        assert "backstop" in ei.value.event.reason
+        assert time.perf_counter() - t0 < 120
     for p in mp.active_children():
         p.join(timeout=10)
     assert mp.active_children() == []

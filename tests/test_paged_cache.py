@@ -141,6 +141,8 @@ def test_engine_config_validation():
         EngineConfig(cache="bogus")
     with pytest.raises(ValueError, match="multiple"):
         EngineConfig(cache="paged", max_len=60, block_size=16)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefix_cache=True)              # needs cache="paged"
     cfg = EngineConfig(n_slots=2, max_len=64, cache="paged", block_size=16)
     assert cfg.resolved_max_blocks == 8          # dense footprint default
     assert cfg.resolved_max_seqs == 8
@@ -232,3 +234,159 @@ def test_block_allocator_all_or_nothing():
         a.free(got)                                  # double free
     with pytest.raises(ValueError):
         a.free([99])                                 # foreign block
+
+
+# ---------------------------------------------------------------------------
+# deferred-free reclamation at admission (bugfix regression)
+# ---------------------------------------------------------------------------
+def test_can_admit_counts_deferred_frees():
+    """``can_admit`` must see blocks parked behind a deferred free: the
+    pre-fix version counted only ``allocator.n_free``, so a freshly
+    freed (but unflushed) row made a reclaimable pool look exhausted."""
+    from repro.models.cache import PagedLayout
+    layout = PagedLayout(block_size=4, max_blocks=4)
+    cache = PagedCache(tree={}, n_rows=2, layout=layout, max_len=16,
+                       batch_axes=None, jits={})
+    assert cache.alloc(0, 16)                  # whole pool to row 0
+    assert not cache.can_admit(4)              # live row: truly full
+    cache.free(0)                              # deferred (awaiting flush)
+    assert cache.allocator.n_free == 0         # nothing freed yet...
+    assert cache.can_admit(16)                 # ...but all reclaimable
+    cache.flush()
+    assert cache.alloc(1, 16)
+
+
+def test_admission_reclaims_deferred_frees_same_step(reduced_models):
+    """Admit/finish churn on a pool exactly one request wide: each
+    max_new_tokens=1 request instant-finishes inside the admission batch,
+    parking its blocks behind a deferred free. The engine must flush and
+    keep admitting within the SAME macro-step — pre-fix, the blocked
+    round ended and each request cost a full step."""
+    model, params = reduced_models["qwen3-0.6b"]
+    tight = EngineConfig(n_slots=4, max_len=64, cache="paged",
+                         block_size=16, max_blocks=4)
+    reqs = _requests(model.cfg, [(48, 1), (48, 1), (48, 1)])
+    eng = ServingEngine(model, params, tight)
+    eng.submit_many(reqs)
+    eng.step()
+    assert len(eng.done) == 3, "churn did not drain in one macro-step"
+    assert eng.steps == 1
+    cb = eng.cache_backend
+    cb.flush()
+    assert cb.allocator.n_free == 4 and cb.n_live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing: bit parity + hit accounting
+# ---------------------------------------------------------------------------
+SHARE_PREFIX_LEN = 64                 # four full 16-token blocks
+SHARE_PHASE1 = [(80, 4)]              # seeds the prefix index alone
+SHARE_PHASE2 = [(72, 3), (70, 4), (75, 2)]   # mixed tails, same prefix
+# ssm archs are never bucket-padded and their chunked prefill scan needs
+# seq % 32 == 0 — same shared prefix, chunk-aligned prompt lengths
+SHARE_PHASE1_SSM = [(96, 4)]
+SHARE_PHASE2_SSM = [(96, 3), (96, 4), (96, 2)]
+
+
+def _shared_prefix_requests(cfg, specs, rid0=0, seed=0):
+    """Requests sharing one SHARE_PREFIX_LEN-token prompt prefix (and,
+    for encoder/vlm archs, identical extras — the hash seed covers
+    extras, so differing frontends must not alias)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (SHARE_PREFIX_LEN,),
+                          dtype=np.int32)
+    extras = {}
+    if cfg.n_encoder_layers:
+        extras["audio_frames"] = 0.1 * rng.standard_normal(
+            (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.n_vision_tokens:
+        extras["vision_embeds"] = 0.1 * rng.standard_normal(
+            (cfg.n_vision_tokens, cfg.vision_embed_dim)).astype(np.float32)
+    reqs = []
+    for i, (plen, max_new) in enumerate(specs):
+        tail = rng.integers(0, cfg.vocab_size, (plen - SHARE_PREFIX_LEN,),
+                            dtype=np.int32)
+        reqs.append(Request(rid=rid0 + i,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=max_new, extras=extras))
+    return reqs
+
+
+def _serve_phases(model, params, phases, config):
+    """Drive the phases through ONE engine, draining between them — the
+    second phase's admission then sees the first phase's prefix index,
+    and both sharing modes admit the same prefill batch sizes (logits
+    are batch-size-sensitive at the last ulp, so parity needs equal n)."""
+    eng = ServingEngine(model, params, config)
+    got = {}
+    for reqs in phases:
+        eng.submit_many([Request(r.rid, r.prompt.copy(), r.max_new_tokens,
+                                 extras=r.extras) for r in reqs])
+        for c in eng.run():
+            got[c.rid] = (c.tokens, c.prefix_hit_tokens)
+    return got, eng
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefix_sharing_bit_parity(arch, reduced_models):
+    """Greedy streams with prefix sharing ON are bit-identical to the
+    non-sharing paged path at the same block budget, across every model
+    family. Eligible archs (the engine's sharing gate) must show hits on
+    the second phase; gated archs must run with zero hits — sharing off
+    in all but name."""
+    model, params = reduced_models[arch]
+    p1, p2 = ((SHARE_PHASE1_SSM, SHARE_PHASE2_SSM) if model.cfg.is_ssm
+              else (SHARE_PHASE1, SHARE_PHASE2))
+    phases = [_shared_prefix_requests(model.cfg, p1, rid0=0),
+              _shared_prefix_requests(model.cfg, p2, rid0=10)]
+    base = dict(n_slots=4, max_len=128, cache="paged", block_size=16)
+    on, eng_on = _serve_phases(model, params, phases,
+                               EngineConfig(prefix_cache=True, **base))
+    off, eng_off = _serve_phases(model, params, phases,
+                                 EngineConfig(prefix_cache=False, **base))
+    assert {r: t for r, (t, _) in on.items()} \
+        == {r: t for r, (t, _) in off.items()}
+    assert all(h == 0 for _, h in off.values())
+    assert eng_off.prefix_hit_tokens_total == 0
+    if eng_on._share:
+        # every phase-2 request hit the full shared prefix
+        assert [h for r, (_, h) in sorted(on.items()) if r >= 10] \
+            == [SHARE_PREFIX_LEN] * len(SHARE_PHASE2)
+        assert eng_on.prefix_hit_tokens_total \
+            == SHARE_PREFIX_LEN * len(SHARE_PHASE2)
+        assert eng_on.prefill_tokens_executed \
+            < eng_off.prefill_tokens_executed
+    else:
+        assert eng_on.prefix_hit_tokens_total == 0
+    # conservation with the prefix index holding its own references
+    cb = eng_on.cache_backend
+    cb.flush()
+    assert (cb.allocator.n_free + cb.n_live_blocks
+            == cb.layout.max_blocks)
+
+
+def test_prefix_sharing_covers_moe():
+    """The six-family sweep only exercises the dense gate (mixtral ships
+    a sliding window); a window-free mixtral variant pins the moe suffix
+    path — dense-layer prologue included — to the same bit parity."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+    cfg = dc.replace(get_config("mixtral-8x22b-reduced"), sliding_window=0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    phases = [_shared_prefix_requests(cfg, SHARE_PHASE1, rid0=0),
+              _shared_prefix_requests(cfg, SHARE_PHASE2, rid0=10)]
+    base = dict(n_slots=4, max_len=128, cache="paged", block_size=16)
+    on, eng_on = _serve_phases(model, params, phases,
+                               EngineConfig(prefix_cache=True, **base))
+    off, _ = _serve_phases(model, params, phases,
+                           EngineConfig(prefix_cache=False, **base))
+    assert eng_on._share, "window-free moe should pass the sharing gate"
+    assert {r: t for r, (t, _) in on.items()} \
+        == {r: t for r, (t, _) in off.items()}
+    assert eng_on.prefix_hit_tokens_total \
+        == SHARE_PREFIX_LEN * len(SHARE_PHASE2)
