@@ -1,0 +1,53 @@
+"""Static invariant suite for the serving stack.
+
+``python -m repro.analysis --all`` runs every analyzer and exits
+nonzero on any finding; ``--report out.json`` writes the machine-
+readable report (see report.Report.to_json). Individual analyzers run
+with ``--only <name>``. The suite is wired into tier-1
+(tests/test_analysis.py) and CI's ``analysis`` lane.
+
+Analyzers (all static — nothing dispatches on a device):
+
+* ``donation``     — every hot jit's donated operand really aliases
+* ``host-sync``    — one device→host transfer per decode chunk
+* ``compile-keys`` — the jit-cache key set stays bounded
+* ``kernels``      — Pallas block shapes / index maps / VMEM budgets
+* ``concurrency``  — class attrs written from two threads
+* ``wire``         — pre-affinity import closure + pipe picklability
+"""
+from repro.analysis.report import Finding, Report
+
+__all__ = ["Finding", "Report", "ANALYZERS", "run_analyzers"]
+
+# name -> import path of a module exposing run() -> list[Finding]
+ANALYZERS = {
+    "donation": "repro.analysis.donation",
+    "host-sync": "repro.analysis.host_sync",
+    "compile-keys": "repro.analysis.compile_keys",
+    "kernels": "repro.analysis.kernels",
+    "concurrency": "repro.analysis.concurrency",
+    "wire": "repro.analysis.wire",
+}
+
+
+def run_analyzers(names=None) -> Report:
+    """Run the named analyzers (default: all) into one Report. An
+    analyzer that crashes is itself a finding — the suite must not
+    silently skip a broken gate."""
+    import importlib
+    import traceback
+
+    report = Report()
+    for name in (names or ANALYZERS):
+        if name not in ANALYZERS:
+            raise KeyError(f"unknown analyzer {name!r}; "
+                           f"one of {sorted(ANALYZERS)}")
+        try:
+            findings = importlib.import_module(ANALYZERS[name]).run()
+        except Exception:
+            findings = [Finding(
+                name, "ERR000", "analyzer",
+                "analyzer crashed:\n" + traceback.format_exc())]
+        report.analyzers_run.append(name)
+        report.extend(findings)
+    return report

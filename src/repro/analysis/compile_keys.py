@@ -1,0 +1,171 @@
+"""Compile-key enumerator: the jit-cache key set, derived statically.
+
+A serving engine must compile a BOUNDED set of executables — an
+unbounded key (a raw prompt length in a prefill key, a raw clamp value
+in a chunk key) turns ragged traffic into a compile spike mid-serving.
+This analyzer derives the key space of the shared jit cache
+(``engine._JIT_CACHE``) for a reference config and fails if it exceeds
+the budget, and cross-checks the SOURCE for drift:
+
+* every ``self._jits[...]`` key kind appearing in engine.py / cache.py
+  must be one the enumerator models (a new kind is an unmodelled — and
+  potentially unbounded — compile axis until it is registered here);
+* ``_bucket`` must keep rounding to a power of two past the table (its
+  image over [1, 64k] is checked, not assumed);
+* the chunk-length clamp in ``_decode_chunk`` must keep its
+  power-of-two rounding shift (``1 << (exact.bit_length() - 1)``) — the
+  AST is checked for the shift so a well-meaning "use the exact clamp"
+  edit is caught before it ships log2→linear compile growth.
+"""
+from __future__ import annotations
+
+import ast
+import math
+import pathlib
+
+from repro.analysis.report import Finding
+
+_SERVING = pathlib.Path(__file__).resolve().parents[1] / "serving"
+
+# key kinds the enumerator models — keep in sync with count_keys()
+KNOWN_KINDS = {
+    "decode", "prefill", "prefill_sfx", "chunk",
+    "insert", "paged_clear", "paged_copy", "paged_append", "paged_gather",
+}
+
+# compiled-executable budget for the reference config below; generous
+# headroom over the current count (see count_keys) but far below what a
+# single unbounded axis would produce
+DEFAULT_BUDGET = 4096
+
+
+def _buckets_upto(max_len: int) -> int:
+    """Distinct prefill widths ``_bucket`` can emit for prompts up to
+    ``max_len`` — table entries plus power-of-two extensions."""
+    from repro.serving.engine import PROMPT_BUCKETS, _bucket
+    return len({_bucket(n) for n in range(1, max_len + 1)}) \
+        if max_len >= 1 else 0
+
+
+def count_keys(n_slots: int = 4, max_len: int = 512,
+               block_size: int = 16, chunk_tokens: int = 32) -> dict:
+    """Upper bound on jit-cache keys per kind for one engine config
+    serving prompts up to ``max_len``. Every axis is a bounded function
+    of the config — that is the property the budget check pins."""
+    n_widths = _buckets_upto(max_len)
+    n_offsets = max_len // block_size           # suffix rope offsets
+    n_chunk = int(math.log2(chunk_tokens)) + 1  # power-of-two lengths
+    return {
+        "decode": 1,
+        "prefill": n_slots * n_widths,
+        "prefill_sfx": n_slots * n_widths * n_offsets,
+        "chunk": 2 * n_chunk,                   # dense + paged
+        "insert": 2,
+        "paged_clear": 1,
+        "paged_copy": 1,
+        "paged_append": 1,
+        "paged_gather": 1,
+    }
+
+
+def _jit_key_kinds(path: pathlib.Path) -> list[tuple[str, int]]:
+    """(kind, lineno) for every jit-cache key literal in ``path``: tuple
+    literals assigned to ``key`` in a method that indexes ``self._jits``,
+    plus direct ``self._jits[("kind", ...)]`` subscripts, plus the
+    string-literal kinds (``"decode"``)."""
+    tree = ast.parse(path.read_text())
+    out: list[tuple[str, int]] = []
+
+    def is_jits_sub(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Attribute)
+                and node.value.attr == "_jits")
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        uses_jits = any(is_jits_sub(n) for n in ast.walk(fn))
+        if not uses_jits:
+            continue
+        for node in ast.walk(fn):
+            lit = None
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "key"
+                            for t in node.targets)):
+                lit = node.value
+            elif is_jits_sub(node):
+                lit = node.slice
+            if isinstance(lit, ast.Tuple) and lit.elts:
+                head = lit.elts[0]
+                if isinstance(head, ast.Constant) and isinstance(
+                        head.value, str):
+                    out.append((head.value, head.lineno))
+            elif isinstance(lit, ast.Constant) and isinstance(
+                    lit.value, str):
+                out.append((lit.value, lit.lineno))
+    return out
+
+
+def _chunk_shift_present(path: pathlib.Path) -> bool:
+    """Does ``_decode_chunk`` still derive ``n_tokens`` via a left
+    shift (the power-of-two rounding)?"""
+    tree = ast.parse(path.read_text())
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and fn.name == "_decode_chunk":
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == "n_tokens"
+                                for t in node.targets)):
+                    return any(isinstance(s, ast.BinOp)
+                               and isinstance(s.op, ast.LShift)
+                               for s in ast.walk(node.value))
+    return False
+
+
+def run(engine_path: pathlib.Path | None = None,
+        cache_path: pathlib.Path | None = None,
+        budget: int = DEFAULT_BUDGET) -> list[Finding]:
+    engine_path = engine_path or _SERVING / "engine.py"
+    cache_path = cache_path or _SERVING / "cache.py"
+    findings: list[Finding] = []
+
+    # -- drift: unmodelled key kinds
+    for path in (engine_path, cache_path):
+        for kind, lineno in _jit_key_kinds(path):
+            if kind not in KNOWN_KINDS:
+                findings.append(Finding(
+                    "compile-keys", "KEY001", f"{path.name}:{lineno}",
+                    f"jit-cache key kind {kind!r} is not modelled by the "
+                    "compile-key enumerator — register it in "
+                    "repro.analysis.compile_keys.KNOWN_KINDS and "
+                    "count_keys() so its boundedness is checked"))
+
+    # -- bucket image must stay power-of-two past the table
+    from repro.serving.engine import PROMPT_BUCKETS, _bucket
+    for n in range(1, 1 << 16):
+        b = _bucket(n)
+        if b < n or (b not in PROMPT_BUCKETS and b & (b - 1)):
+            findings.append(Finding(
+                "compile-keys", "KEY002", f"_bucket({n})={b}",
+                "prompt bucketing no longer rounds to a bounded set — "
+                "prefill keys become unbounded in prompt length"))
+            break
+
+    # -- chunk clamp must keep its power-of-two rounding
+    if not _chunk_shift_present(engine_path):
+        findings.append(Finding(
+            "compile-keys", "KEY003", f"{engine_path.name}:_decode_chunk",
+            "n_tokens is no longer rounded down to a power of two — "
+            "each distinct ragged clamp value would compile its own "
+            "decode-chunk executable"))
+
+    # -- budget
+    counts = count_keys()
+    total = sum(counts.values())
+    if total > budget:
+        findings.append(Finding(
+            "compile-keys", "KEY004", "count_keys()",
+            f"reference-config jit key bound {total} exceeds the "
+            f"budget {budget} ({counts})"))
+    return findings

@@ -1,0 +1,183 @@
+"""Donation auditor: prove every hot jit's donated operand really aliases.
+
+The engine's macro-step is copy-free only because its jits donate the KV
+cache (decode chunk, dense/paged prefill-row insertion, paged table
+writes and scrubs, CoW page copies). jax treats an unusable donation as
+a *warning* and silently copies — a one-line model change (returning a
+reshaped tree, a dtype change on one leaf) reintroduces a full-cache
+copy per step with no test failing. This auditor lowers each hot jit for
+every model family × cache mode from ``ShapeDtypeStruct``s (no params
+materialised, nothing executed) and fails unless the donated tree's
+every array leaf carries an aliasing marker in the lowered module
+(``core/hlo_analysis.parse_donation``).
+
+The deliberately-undonated executables (``paged_gather`` — a pure read
+the suffix path must not consume) are audited for the OPPOSITE
+property: zero aliasing markers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Finding
+from repro.core.hlo_analysis import parse_donation
+
+# one representative per model family (models/model.py's family table) —
+# the same six the paged parity suite pins down
+FAMILY_ARCHS = (
+    "qwen3-0.6b",        # dense
+    "gemma3-27b",        # gemma (local/global sliding-window pattern)
+    "mixtral-8x22b",     # moe
+    "mamba2-2.7b",       # ssm
+    "zamba2-7b",         # zamba (ssm + shared attention)
+    "whisper-large-v3",  # whisper (encoder-decoder)
+)
+
+_MAX_LEN = 64
+_BLOCK = 16
+_N_SLOTS = 2
+_CHUNK = 8
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def _n_leaves(tree) -> int:
+    return len(jax.tree.leaves(tree))
+
+
+@functools.lru_cache(maxsize=None)
+def _engine_for(arch: str, mode: str):
+    """A ServingEngine over param STRUCTS — engine construction only
+    touches params to store them, so the jit builders work unexecuted."""
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = get_config(arch + "-reduced")
+    model = Model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return ServingEngine(model, params, EngineConfig(
+        n_slots=_N_SLOTS, max_len=_MAX_LEN, cache=mode, block_size=_BLOCK))
+
+
+def _check(label: str, lowered, donated_tree, *, expect_none=False,
+           what="cache") -> list[Finding]:
+    info = parse_donation(lowered.as_text())
+    if expect_none:
+        if info.n_aliased:
+            return [Finding(
+                "donation", "DON002", label,
+                f"pure-read executable aliases {info.n_aliased} "
+                "operand(s) — a donation crept into a path that must "
+                "leave its input tree alive")]
+        return []
+    want = _n_leaves(donated_tree)
+    if info.n_aliased < want:
+        return [Finding(
+            "donation", "DON001", label,
+            f"donated {what} has {want} array leaves but only "
+            f"{info.n_aliased} alias an output "
+            f"({len(info.aliased_outputs)} aliased, "
+            f"{info.buffer_donors} deferred donors) — XLA will silently "
+            "copy the rest every dispatch")]
+    return []
+
+
+def _chunk_state_struct(eng):
+    n_rows = len(eng.slots)
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    return {"tokens": i32((n_rows,)), "pos": i32((n_rows,)),
+            "remaining": i32((n_rows,)),
+            "active": jax.ShapeDtypeStruct((n_rows,), jnp.bool_),
+            "key": _struct(jax.random.PRNGKey(0))}
+
+
+def _prefill_batch_struct(eng, n: int, bl: int):
+    cfg = eng.model.cfg
+    batch = {"tokens": jax.ShapeDtypeStruct((n, bl), jnp.int32)}
+    if cfg.n_encoder_layers:
+        batch["audio_frames"] = jax.ShapeDtypeStruct(
+            (n, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (n, cfg.n_vision_tokens, cfg.vision_embed_dim), jnp.float32)
+    return batch
+
+
+def audit_engine(arch: str, mode: str) -> list[Finding]:
+    """Lower every hot jit of one (family, cache-mode) engine and verify
+    its donation contract."""
+    findings: list[Finding] = []
+    eng = _engine_for(arch, mode)
+    params = eng.params                      # already structs
+    cache_s = _struct(eng.cache)
+    site = f"{arch}/{mode}"
+
+    # -- fused decode chunk: donates the cache (arg 1)
+    low = eng._chunk_fn(_CHUNK).lower(params, cache_s,
+                                      _chunk_state_struct(eng))
+    findings += _check(f"{site}/chunk", low, cache_s)
+
+    # -- prefill: pure (fresh mini-cache built inside) — nothing donated
+    batch = _prefill_batch_struct(eng, 1, _BLOCK)
+    idx = jax.ShapeDtypeStruct((1,), jnp.int32)
+    low = eng._prefill_fn(1, _BLOCK).lower(params, batch, idx)
+    findings += _check(f"{site}/prefill", low, None, expect_none=True)
+
+    cb = eng.cache_backend
+    src_s = jax.eval_shape(
+        lambda: eng.model.init_cache(1, _BLOCK if mode == "paged"
+                                     else _MAX_LEN))
+    if mode == "dense":
+        low = cb._insert_fn().lower(cache_s, src_s,
+                                    jax.ShapeDtypeStruct((1,), jnp.int32))
+        findings += _check(f"{site}/insert", low, cache_s)
+        return findings
+
+    # -- paged: prefill-row scatter, table write, scrub, CoW page copy
+    nblk = _MAX_LEN // _BLOCK
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    low = cb._insert_fn().lower(cache_s, src_s, i32((1,)),
+                                i32((1, nblk)), i32(()))
+    findings += _check(f"{site}/insert", low, cache_s)
+
+    low = cb._append_fn().lower(cache_s, i32(()), i32((1,)), i32((1,)))
+    findings += _check(f"{site}/append", low, cache_s)
+
+    low = cb._clear_fn().lower(cache_s, i32((1,)))
+    findings += _check(f"{site}/clear", low, cache_s)
+
+    low = cb._copy_fn().lower(cache_s, i32(()), i32(()))
+    findings += _check(f"{site}/copy", low, cache_s)
+
+    low = cb._gather_fn().lower(cache_s, i32((1, nblk)),
+                                i32((_BLOCK,)))
+    findings += _check(f"{site}/gather", low, None, expect_none=True)
+
+    # -- residual-suffix prefill: pure, like full prefill (the families
+    # the sharing gate admits — see ServingEngine._share)
+    if eng.model.fam in ("dense", "moe"):
+        batch = _prefill_batch_struct(eng, 1, _BLOCK)
+        ctx = jax.eval_shape(lambda t: cb._gather_fn()(
+            t, jnp.zeros((1, nblk), jnp.int32),
+            jnp.arange(_BLOCK)), cache_s)
+        low = eng._suffix_prefill_fn(1, _BLOCK, _BLOCK).lower(
+            params, batch, ctx, jax.ShapeDtypeStruct((1,), jnp.int32))
+        findings += _check(f"{site}/prefill_sfx", low, None,
+                           expect_none=True)
+    return findings
+
+
+def run(archs=FAMILY_ARCHS, modes=("dense", "paged")) -> list[Finding]:
+    findings: list[Finding] = []
+    for arch in archs:
+        for mode in modes:
+            findings += audit_engine(arch, mode)
+    return findings

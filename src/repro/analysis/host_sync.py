@@ -1,0 +1,178 @@
+"""Host-sync auditor: one device→host transfer per decode chunk, enforced.
+
+The macro-step contract (engine.py): ``step()`` pays exactly ONE host
+transfer per fused chunk — the ``jax.device_get((block, emitted))`` in
+``_decode_chunk``. Everything else reachable from ``step()`` must stay
+on the host or on the device; a stray ``np.asarray(jnp...)``, ``.item()``
+or ``block_until_ready()`` in that call graph serialises the pipeline
+once per step and silently erodes the divide-and-save win.
+
+Static AST walk, no execution: build the ``self.*()`` call graph from
+``ServingEngine.step``, follow ``self.cache_backend.*()`` edges into
+both cache backends (serving/cache.py), and count syntactic sync sites
+per method against a small allowance table:
+
+* ``_decode_chunk``    — exactly 1 ``jax.device_get`` (the contract)
+* ``_pick``            — 2 ``np.asarray(<device expr>)`` sites (greedy /
+                         sampled branch; runs once per admission
+                         dispatch, not per chunk)
+* ``_decode_token``    — exempt: the per-token baseline exists to be
+                         measurably worse (benchmarks)
+
+Sync sites recognised: ``jax.device_get(..)``, ``X.block_until_ready()``,
+``X.item()``, ``np.asarray(E)`` / ``np.array(E)`` / ``float(E)`` /
+``int(E)`` where ``E`` contains a ``jnp.*`` / ``jax.*`` call (a device
+value forced to host). ``jnp.asarray`` is host→device and free.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.report import Finding, line_suppressed
+
+_SERVING = pathlib.Path(__file__).resolve().parents[1] / "serving"
+
+# method -> {sync kind -> allowed count}; None = exempt entirely
+ALLOWANCES: dict[str, dict[str, int] | None] = {
+    "_decode_chunk": {"device_get": 1},
+    "_pick": {"host_coerce": 2},
+    "_decode_token": None,
+}
+
+ENTRY = "step"
+
+
+def _is_name_chain(node: ast.AST, *chain: str) -> bool:
+    """True when ``node`` is exactly ``chain[0].chain[1]...``."""
+    for part in reversed(chain[1:]):
+        if not (isinstance(node, ast.Attribute) and node.attr == part):
+            return False
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == chain[0]
+
+
+def _contains_device_call(node: ast.AST) -> bool:
+    """Does the expression contain a call on ``jnp.*`` / ``jax.*``?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            f = sub.func
+            while isinstance(f, ast.Attribute):
+                f = f.value
+            if isinstance(f, ast.Name) and f.id in ("jnp", "jax"):
+                return True
+    return False
+
+
+def _sync_kind(call: ast.Call) -> str | None:
+    f = call.func
+    if _is_name_chain(f, "jax", "device_get"):
+        return "device_get"
+    if isinstance(f, ast.Attribute) and f.attr in ("block_until_ready",
+                                                   "item"):
+        return "block"
+    if call.args and (
+            _is_name_chain(f, "np", "asarray")
+            or _is_name_chain(f, "np", "array")
+            or (isinstance(f, ast.Name) and f.id in ("float", "int"))):
+        if _contains_device_call(call.args[0]):
+            return "host_coerce"
+    return None
+
+
+class _ClassIndex:
+    """Methods of one class: sync sites + intra/inter-class call edges."""
+
+    def __init__(self, cls: ast.ClassDef, path: pathlib.Path,
+                 lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.methods: dict[str, ast.FunctionDef] = {
+            n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    def calls(self, meth: str) -> tuple[set[str], set[str]]:
+        """(self.X() targets, self.cache_backend.X() targets)."""
+        own: set[str] = set()
+        backend: set[str] = set()
+        fn = self.methods.get(meth)
+        if fn is None:
+            return own, backend
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if _is_name_chain(f.value, "self"):
+                    own.add(f.attr)
+                elif _is_name_chain(f.value, "self", "cache_backend"):
+                    backend.add(f.attr)
+        return own, backend
+
+    def sync_sites(self, meth: str) -> list[tuple[str, int]]:
+        fn = self.methods.get(meth)
+        if fn is None:
+            return []
+        out = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                kind = _sync_kind(node)
+                if kind and not line_suppressed(self.lines, node.lineno,
+                                                "host-sync"):
+                    out.append((kind, node.lineno))
+        return out
+
+
+def _load(path: pathlib.Path) -> dict[str, _ClassIndex]:
+    src = path.read_text()
+    tree = ast.parse(src)
+    lines = src.splitlines()
+    return {n.name: _ClassIndex(n, path, lines)
+            for n in tree.body if isinstance(n, ast.ClassDef)}
+
+
+def run(engine_path: pathlib.Path | None = None,
+        cache_path: pathlib.Path | None = None) -> list[Finding]:
+    engine_path = engine_path or _SERVING / "engine.py"
+    cache_path = cache_path or _SERVING / "cache.py"
+    eng_classes = _load(engine_path)
+    cache_classes = _load(cache_path)
+    engine = eng_classes.get("ServingEngine")
+    if engine is None:
+        return [Finding("host-sync", "SYN000", str(engine_path),
+                        "ServingEngine class not found — auditor is "
+                        "looking at the wrong module")]
+    backends = [c for n, c in cache_classes.items()
+                if n in ("DenseCache", "PagedCache")]
+
+    # reachability from step() across self.*() edges; cache_backend.*()
+    # edges fan out into both backend classes
+    seen: set[tuple[int, str]] = set()
+    work: list[tuple[_ClassIndex, str]] = [(engine, ENTRY)]
+    findings: list[Finding] = []
+    while work:
+        idx, meth = work.pop()
+        key = (id(idx), meth)
+        if key in seen or meth not in idx.methods:
+            continue
+        seen.add(key)
+        allow = ALLOWANCES.get(meth, {})
+        if allow is None:          # exempt (per-token baseline)
+            continue
+        counts: dict[str, int] = {}
+        for kind, lineno in idx.sync_sites(meth):
+            counts[kind] = counts.get(kind, 0) + 1
+            if counts[kind] > allow.get(kind, 0):
+                findings.append(Finding(
+                    "host-sync", "SYN001",
+                    f"{idx.path.name}:{lineno}",
+                    f"device→host sync ({kind}) in {meth}() reachable "
+                    "from step() beyond the one-transfer-per-chunk "
+                    "contract"))
+        own, backend = idx.calls(meth)
+        for m in own:
+            work.append((idx, m))
+        for m in backend:
+            for b in backends:
+                work.append((b, m))
+    return findings

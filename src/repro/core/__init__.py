@@ -1,5 +1,29 @@
-from repro.core import containers, energy_model, hlo_analysis, roofline, splitter
-from repro.core.scheduler import DivideAndSaveScheduler
+"""Core package surface.
+
+Submodules resolve lazily: the process-container child unpickles its
+spawn target (``core.testbed._pinned_main``) at bootstrap, which imports
+this package BEFORE the cpuset is applied — an eager ``containers`` /
+``roofline`` import here would drag jax in pre-affinity and size XLA's
+threadpool from the whole host (see serving/child.py and
+``repro.analysis.wire``, which gates this property).
+"""
+from __future__ import annotations
+
+import importlib
 
 __all__ = ["containers", "energy_model", "hlo_analysis", "roofline",
-           "splitter", "DivideAndSaveScheduler"]
+           "splitter", "testbed", "DivideAndSaveScheduler"]
+
+_FROM = {"DivideAndSaveScheduler": "repro.core.scheduler"}
+
+
+def __getattr__(name: str):
+    if name in _FROM:
+        return getattr(importlib.import_module(_FROM[name]), name)
+    if name in __all__:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

@@ -34,6 +34,14 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# donation markers in lowered StableHLO: a donated entry argument that XLA
+# can alias to an output carries ``tf.aliasing_output = N : i32``; under
+# multi-device lowerings where the pairing is deferred to compile time the
+# argument is marked ``jax.buffer_donor = true`` instead. A donated operand
+# carrying NEITHER is a silent copy — jax only warns (UserWarning), so the
+# donation auditor turns the absence into a hard finding.
+_ALIASING_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)\s*:\s*i32")
+_BUFFER_DONOR_RE = re.compile(r"jax\.buffer_donor\s*=\s*true")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
 _WHILE_RE = re.compile(
@@ -95,6 +103,34 @@ def _split_operands(s: str) -> list[str]:
     if cur:
         out.append("".join(cur).strip())
     return [o for o in out if o]
+
+
+@dataclasses.dataclass(frozen=True)
+class DonationInfo:
+    """Aliasing facts parsed from one lowered (StableHLO) module."""
+    aliased_outputs: tuple    # output indices claimed by aliased args
+    buffer_donors: int        # args marked jax.buffer_donor (multi-device)
+
+    @property
+    def n_aliased(self) -> int:
+        """Arguments that will actually reuse their buffer — either
+        aliased to a concrete output now or marked as a donor for the
+        compiler to pair up later."""
+        return len(self.aliased_outputs) + self.buffer_donors
+
+
+def parse_donation(stablehlo_text: str) -> DonationInfo:
+    """Extract donation/aliasing markers from ``lowered.as_text()``.
+
+    Every donated argument jax could use appears exactly once: as
+    ``tf.aliasing_output`` on single-device lowerings, or as
+    ``jax.buffer_donor`` when the alias pairing is left to compile time
+    (sharded lowerings). Donated arguments that appear as neither were
+    dropped — XLA will silently copy them.
+    """
+    return DonationInfo(
+        tuple(int(m) for m in _ALIASING_RE.findall(stablehlo_text)),
+        len(_BUFFER_DONOR_RE.findall(stablehlo_text)))
 
 
 @dataclasses.dataclass
@@ -309,8 +345,7 @@ def analyze_hlo(text: str, default_trip: int = 1) -> HloCost:
             if body_name not in seen:
                 seen.add(body_name)
                 order.append(body_name)
-        for callee in comp.calls:
-            pass  # fusion bodies: bytes at call site; flops added below
+        # fusion bodies (comp.calls): bytes at call site; flops added below
     # computations reachable only via whiles get their mult; others 0 (their
     # cost is attributed at the call site for fusions)
     # innermost while bodies with no collectives model one fused (Pallas)

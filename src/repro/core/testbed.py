@@ -145,7 +145,7 @@ def _detector_body(conn, go, frames, batch):
     def init(key):
         params = []
         cin = _FRAME_SHAPE[-1]
-        for i, cout in enumerate(_CHANNELS):
+        for cout in _CHANNELS:
             key, k1 = jax.random.split(key)
             params.append(jax.random.normal(k1, (3, 3, cin, cout),
                                             jnp.float32) * 0.1)

@@ -74,7 +74,7 @@ def mla_decode_ctx(q_lat: jax.Array, q_rope: jax.Array, ckv: jax.Array,
     grid = (B, S // block_s)
 
     kernel = functools.partial(_mla_kernel, scale=scale)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -93,4 +93,3 @@ def mla_decode_ctx(q_lat: jax.Array, q_rope: jax.Array, ckv: jax.Array,
         ],
         interpret=interpret,
     )(q_lat, q_rope, ckv, k_rope, valid)
-    return out

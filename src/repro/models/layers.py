@@ -82,8 +82,9 @@ def layernorm_fwd(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
 # ---------------------------------------------------------------------------
 def rope_freqs(head_dim: int, theta: float, partial: float = 1.0) -> jax.Array:
     rot_dim = int(head_dim * partial) // 2 * 2
-    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
-    return inv  # (rot_dim // 2,)
+    # (rot_dim // 2,)
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2,
+                                       dtype=jnp.float32) / rot_dim))
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float,

@@ -15,18 +15,31 @@ from __future__ import annotations
 import importlib
 import warnings
 
-from repro.serving.backend import ContainerBackend
-from repro.serving.cache import CacheBackend
-from repro.serving.engine import Completion, EngineConfig, Request
+# only the import-light wire modules load eagerly: the process child
+# unpickles ``serving.child._serving_child`` pre-affinity, which runs
+# this __init__ — an eager engine/backend import here would pull jax
+# into the child before its cpuset exists (repro.analysis.wire gates
+# this). The heavy names resolve on first attribute access instead.
 from repro.serving.events import (ChunkEvent, ContainerFailure, DoneEvent,
                                   FailedEvent, RejectedEvent, RetryEvent)
 from repro.serving.faults import Fault, FaultPlan
-from repro.serving.router import RequestFailed, RequestRejected, Router
 
 __all__ = ["Router", "Request", "Completion", "ChunkEvent", "DoneEvent",
            "RetryEvent", "FailedEvent", "RejectedEvent", "ContainerFailure",
            "RequestFailed", "RequestRejected", "Fault", "FaultPlan",
            "ContainerBackend", "EngineConfig", "CacheBackend"]
+
+# curated-but-heavy surface: resolved lazily, no DeprecationWarning
+_CANONICAL = {
+    "ContainerBackend": "repro.serving.backend",
+    "CacheBackend": "repro.serving.cache",
+    "Completion": "repro.serving.engine",
+    "EngineConfig": "repro.serving.engine",
+    "Request": "repro.serving.engine",
+    "RequestFailed": "repro.serving.router",
+    "RequestRejected": "repro.serving.router",
+    "Router": "repro.serving.router",
+}
 
 # legacy surface: name -> home module. Resolved on attribute access with
 # a DeprecationWarning naming the canonical import.
@@ -54,6 +67,9 @@ _LEGACY = {
 
 
 def __getattr__(name: str):
+    mod = _CANONICAL.get(name)
+    if mod is not None:
+        return getattr(importlib.import_module(mod), name)
     mod = _LEGACY.get(name)
     if mod is None:
         raise AttributeError(

@@ -192,15 +192,13 @@ class DenseCache:
         return True
 
     def free(self, row: int) -> None:
-        return None
+        return
 
     def flush(self) -> None:
-        return None
+        return
 
-    def insert(self, src_cache: Any, rows: list[int],
-               offset: int = 0) -> None:
-        if offset:
-            raise ValueError("DenseCache rows always start at position 0")
+    def _insert_fn(self):
+        """Jitted row-scatter executable (donates the engine cache)."""
         key = ("insert", "dense")
         if key not in self._jits:
             axes = self._axes
@@ -214,8 +212,14 @@ class DenseCache:
                     return jnp.moveaxis(em.at[idx].set(sm), 0, ax)
                 return jax.tree.map(ins, cache, src, axes)
             self._jits[key] = jax.jit(ins_fn, donate_argnums=(0,))
-        self.tree = self._jits[key](self.tree, src_cache,
-                                    jnp.asarray(rows))
+        return self._jits[key]
+
+    def insert(self, src_cache: Any, rows: list[int],
+               offset: int = 0) -> None:
+        if offset:
+            raise ValueError("DenseCache rows always start at position 0")
+        self.tree = self._insert_fn()(self.tree, src_cache,
+                                      jnp.asarray(rows))
 
     def view(self) -> Any:
         return self.tree
@@ -343,7 +347,7 @@ class PagedCache:
         del self._hash_to_block[h]
         self.allocator.release([block])
 
-    def _reserve(self, n: int, protect=frozenset()) -> bool:
+    def _reserve(self, n: int, protect=()) -> bool:
         """Ensure ``n`` free blocks, evicting LRU residents (oldest
         first, never one in ``protect``) before giving up."""
         while self.allocator.n_free < n:
@@ -497,11 +501,16 @@ class PagedCache:
             def walk(t, src, dst):
                 if isinstance(t, dict) and is_paged_group(t):
                     out = dict(t)
+                    # stack depth from the TABLE (always 2 trailing dims):
+                    # page arrays have a group-dependent trailing rank
+                    # (attention 4, int8 scales / MLA latents 3), so
+                    # deriving it from the pages themselves would index
+                    # the LAYER axis as the page axis for 3-dim groups
+                    sdims = t["table"].ndim - 2
                     for dk, _ in _PAGE_PAIRS:
                         if dk not in t:
                             continue
                         pages = t[dk]
-                        sdims = pages.ndim - 4
                         pf = pages.reshape((-1,) + pages.shape[sdims:])
                         pf = pf.at[:, dst].set(pf[:, src])
                         out[dk] = pf.reshape(pages.shape)
@@ -515,9 +524,9 @@ class PagedCache:
                 donate_argnums=(0,))
         return self._jits[key]
 
-    def _write_table(self, row: int, start: int, blocks: list[int]) -> None:
-        """Point logical block indices [start, start+len) of ``row`` at
-        ``blocks`` on device (append path — admission goes via insert)."""
+    def _append_fn(self):
+        """Jitted table-write executable (donates the tree): points a
+        row's logical block indices at physical pages on device."""
         key = ("paged_append",)
         if key not in self._jits:
             def walk(t, row_, idxs, pages):
@@ -535,15 +544,18 @@ class PagedCache:
             self._jits[key] = jax.jit(
                 lambda tree, row_, idxs, pages:
                     walk(tree, row_, idxs, pages), donate_argnums=(0,))
-        idxs = jnp.arange(start, start + len(blocks), dtype=jnp.int32)
-        self.tree = self._jits[key](self.tree, jnp.int32(row), idxs,
-                                    jnp.asarray(blocks, jnp.int32))
+        return self._jits[key]
 
-    def gather_prefix(self, rows: list[int], n_tokens: int) -> Any:
-        """Read the first ``n_tokens`` cached positions of ``rows`` out
-        of the paged pool as dense per-group K/V — the attention context
-        a suffix prefill consumes. Pure read (no donation): call BEFORE
-        ``insert`` consumes the tree."""
+    def _write_table(self, row: int, start: int, blocks: list[int]) -> None:
+        """Point logical block indices [start, start+len) of ``row`` at
+        ``blocks`` on device (append path — admission goes via insert)."""
+        idxs = jnp.arange(start, start + len(blocks), dtype=jnp.int32)
+        self.tree = self._append_fn()(self.tree, jnp.int32(row), idxs,
+                                      jnp.asarray(blocks, jnp.int32))
+
+    def _gather_fn(self):
+        """Jitted prefix-gather executable — a pure READ, deliberately
+        undonated (the tree must survive for the insert that follows)."""
         key = ("paged_gather",)
         if key not in self._jits:
             bs = self.layout.block_size
@@ -551,11 +563,13 @@ class PagedCache:
             def walk(t, table_rows, pos):
                 if isinstance(t, dict) and is_paged_group(t):
                     out = {}
+                    # table-derived stack depth, as in _copy_fn: page
+                    # arrays have group-dependent trailing rank
+                    sdims = t["table"].ndim - 2
                     for dk, sk in _PAGE_PAIRS:
                         if dk not in t:
                             continue
                         pages = t[dk]
-                        sdims = pages.ndim - 4
                         pf = pages.reshape((-1,) + pages.shape[sdims:])
                         pp = table_rows[:, pos // bs]        # (n, H)
                         g = pf[:, pp, pos % bs]   # (S, n, H, kv, hd)
@@ -569,19 +583,19 @@ class PagedCache:
 
             self._jits[key] = jax.jit(
                 lambda tree, table_rows, pos: walk(tree, table_rows, pos))
-        return self._jits[key](self.tree,
-                               jnp.asarray(self._table_rows(rows)),
-                               jnp.arange(n_tokens))
+        return self._jits[key]
 
-    def insert(self, src_cache: Any, rows: list[int],
-               offset: int = 0) -> None:
-        """Scatter the dense prefill mini-cache into the paged tree: every
-        position of each source row lands at ``(table[p // bs], p % bs)``
-        — positions beyond the row's reservation hit the scratch page, so
-        bucket-padded prefill garbage goes to the sink, while live
-        positions are copied verbatim (the bit-parity guarantee). A
-        nonzero ``offset`` shifts the landing positions: the suffix path
-        writes residual K/V behind ``offset`` shared-prefix positions."""
+    def gather_prefix(self, rows: list[int], n_tokens: int) -> Any:
+        """Read the first ``n_tokens`` cached positions of ``rows`` out
+        of the paged pool as dense per-group K/V — the attention context
+        a suffix prefill consumes. Pure read (no donation): call BEFORE
+        ``insert`` consumes the tree."""
+        return self._gather_fn()(self.tree,
+                                 jnp.asarray(self._table_rows(rows)),
+                                 jnp.arange(n_tokens))
+
+    def _insert_fn(self):
+        """Jitted prefill-scatter executable (donates the tree)."""
         key = ("insert", "paged")
         if key not in self._jits:
             axes = self._axes
@@ -615,7 +629,8 @@ class PagedCache:
                     sf = s.astype(pages.dtype).reshape(
                         (-1,) + s.shape[sdims:])
                     scat = jax.vmap(
-                        lambda pg, sr: pg.at[pp, off].set(sr))(pf, sf)
+                        lambda pg, sr, pp=pp, off=off:
+                            pg.at[pp, off].set(sr))(pf, sf)
                     out[dk] = scat.reshape(pages.shape)
                 return out
 
@@ -635,10 +650,21 @@ class PagedCache:
                 lambda tree, src, rows_, table_rows, offset_:
                     walk(tree, src, axes, rows_, table_rows, offset_),
                 donate_argnums=(0,))
-        self.tree = self._jits[key](self.tree, src_cache,
-                                    jnp.asarray(rows, jnp.int32),
-                                    jnp.asarray(self._table_rows(rows)),
-                                    jnp.int32(offset))
+        return self._jits[key]
+
+    def insert(self, src_cache: Any, rows: list[int],
+               offset: int = 0) -> None:
+        """Scatter the dense prefill mini-cache into the paged tree: every
+        position of each source row lands at ``(table[p // bs], p % bs)``
+        — positions beyond the row's reservation hit the scratch page, so
+        bucket-padded prefill garbage goes to the sink, while live
+        positions are copied verbatim (the bit-parity guarantee). A
+        nonzero ``offset`` shifts the landing positions: the suffix path
+        writes residual K/V behind ``offset`` shared-prefix positions."""
+        self.tree = self._insert_fn()(self.tree, src_cache,
+                                      jnp.asarray(rows, jnp.int32),
+                                      jnp.asarray(self._table_rows(rows)),
+                                      jnp.int32(offset))
 
     def view(self) -> Any:
         return self.tree

@@ -1,0 +1,214 @@
+"""The process container's child body — kept import-light on purpose.
+
+``spawn_pinned`` (core/testbed.py) promises the child applies its cpuset
+BEFORE jax can initialise, so XLA's threadpool is sized from the
+container's cores rather than the whole host. That promise is only as
+good as the spawn payload: multiprocessing's spawn start method pickles
+the child target *by reference* (module + qualname), and unpickling it
+at child bootstrap imports that module — before ``_pinned_main`` runs
+``sched_setaffinity``. The child body therefore cannot live in
+``serving/backend.py`` (whose module scope imports the engine, hence
+jax); it lives here, in a module whose import closure is stdlib + numpy
++ the wire dataclasses (events/faults/configs). ``repro.analysis.wire``
+enforces this transitively — a module-scope jax import added anywhere
+under this module's closure fails the static-analysis gate.
+
+Everything heavy (jax, the model, the engine) is imported inside
+``_serving_child`` itself, after affinity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+
+import numpy as np
+
+_IDLE_POLL_S = 0.05
+
+
+def _load_params(model, path: str):
+    import jax
+    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(struct)
+    with np.load(path) as z:
+        leaves = [z[f"leaf{i}"] for i in range(len(z.files))]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedParams:
+    """Picklable descriptor of a ``multiprocessing.shared_memory`` params
+    block: children attach by name and view each leaf at its offset —
+    one parent-side copy total, no filesystem round-trip (the ROADMAP's
+    leftover from the ``.npz`` handoff, which writes and re-reads every
+    byte per child)."""
+    shm_name: str
+    specs: tuple                  # ((shape, dtype_str, offset), ...)
+    nbytes: int
+
+
+def _load_params_shm(model, handle: SharedParams):
+    """Child-side loader: attach, view each leaf, copy onto the device
+    (``jnp.asarray``), detach. The segment outlives the view copies only
+    in the parent, which owns the unlink."""
+    import jax
+    import jax.numpy as jnp
+    from multiprocessing import shared_memory
+    # NOTE on lifetime: spawn children inherit the parent's resource
+    # tracker, so this attach registers a duplicate no-op and the parent
+    # keeps sole ownership of the unlink (ParamsShare.close).
+    shm = shared_memory.SharedMemory(name=handle.shm_name)
+    try:
+        leaves = []
+        for shape, dtype, off in handle.specs:
+            view = np.ndarray(shape, dtype=dtype, buffer=shm.buf, offset=off)
+            # jnp.array(copy=True): jax on CPU may alias a numpy buffer
+            # zero-copy, and an alias into the segment would dangle the
+            # moment it is unmapped below
+            leaves.append(jnp.array(view, copy=True))
+        for leaf in leaves:
+            leaf.block_until_ready()
+    finally:
+        shm.close()
+    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(struct)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _serving_child(conn, cid: int, cfg, params_seed: int,
+                   params_path: str | None, params_shm,
+                   engine_kw: dict, incarnation: int = 0,
+                   fault_plan=None, heartbeat_s: float = 0.0) -> None:
+    """Container body (module-level: spawn pickles it by reference).
+    Affinity was already applied by ``spawn_pinned``; the jax import below
+    therefore sizes XLA's threadpool from the container's cpuset.
+    ``engine_kw`` is ``_engine_config_wire`` output — one EngineConfig,
+    primitives only.
+
+    Streaming protocol: ``("submit", [Request...])`` enqueues,
+    ``("cancel", rid)`` removes one request (queued or mid-decode);
+    after every engine macro-step (and after zero-budget submissions,
+    which complete instantly) the child flushes ``("events", [Event...],
+    busy_s, tokens_generated)``. With ``heartbeat_s`` a daemon thread
+    also sends ``("hb",)`` on that period, so the parent can tell a slow
+    child (heartbeats flowing, no events) from a hung one (silence). The
+    pipe is checked between steps, so a ``("close",)`` lands promptly
+    even mid-stream.
+
+    Exits are classified (EXIT_* in serving/faults.py) so the parent's
+    ``ContainerFailure`` message can say *why* from the exitcode alone:
+    startup failures, a lost reply pipe and engine-step errors each get
+    a distinct nonzero code instead of the silent exit-0 they used to
+    share with clean shutdown."""
+    import sys
+    import traceback
+
+    from repro.serving.faults import (EXIT_FAULT_KILL, EXIT_PIPE_LOST,
+                                      EXIT_STARTUP, EXIT_STEP_ERROR,
+                                      FaultInjector, InjectedFault)
+    send_lock = threading.Lock()
+
+    def send(msg) -> None:
+        # the heartbeat thread and the serve loop share the pipe; Linux
+        # pipe writes interleave at message granularity only under a lock
+        with send_lock:
+            conn.send(msg)
+
+    try:
+        import jax
+
+        from repro.models.model import Model
+        from repro.serving.engine import EngineConfig, ServingEngine
+
+        model = Model(cfg)
+        if params_shm is not None:
+            params = _load_params_shm(model, params_shm)
+        elif params_path:
+            params = _load_params(model, params_path)
+        else:
+            params = model.init(jax.random.PRNGKey(params_seed))
+        engine = ServingEngine(model, params, EngineConfig(**engine_kw))
+        # events cross the pipe as-is: the child must stamp the parent's
+        # container id or every child would claim container 0
+        engine.container_id = cid
+        inj = FaultInjector(fault_plan, cid, incarnation)
+        engine.fault = inj if inj.armed else None
+        buf: list = []
+        engine.on_event = buf.append
+        try:
+            cores = sorted(os.sched_getaffinity(0))
+        except AttributeError:              # non-Linux dev host
+            cores = []
+        send(("ready", cores))
+    except BaseException:
+        try:
+            send(("error", traceback.format_exc()))
+        except Exception:
+            pass
+        sys.exit(EXIT_STARTUP)
+    if heartbeat_s > 0:
+        hb_stop = threading.Event()
+
+        def _heartbeat() -> None:
+            while not hb_stop.wait(heartbeat_s):
+                try:
+                    send(("hb",))
+                except Exception:
+                    return              # pipe gone: main loop exits too
+
+        threading.Thread(target=_heartbeat, daemon=True,
+                         name=f"hb-{cid}").start()
+    while True:
+        try:
+            if buf:
+                if inj.armed and inj.drop_reply():
+                    buf.clear()         # injected reply loss
+                    engine.done.clear()
+                else:
+                    delay = inj.reply_delay() if inj.armed else 0.0
+                    if delay > 0:
+                        time.sleep(delay)
+                    send(("events", list(buf), engine.busy_s,
+                          engine.tokens_generated))
+                    buf.clear()
+                    # DoneEvents carry the completions; nobody calls
+                    # run() here, so drain the engine's done list or it
+                    # grows without bound across a long-lived stream
+                    engine.done.clear()
+            timeout = 0 if engine.has_work else _IDLE_POLL_S
+            if conn.poll(timeout):
+                msg = conn.recv()
+                if msg[0] == "close":
+                    conn.close()
+                    return
+                if msg[0] == "submit":
+                    engine.submit_many(msg[1])
+                    continue               # flush instant completions
+                if msg[0] == "cancel":
+                    engine.cancel(msg[1])
+                    continue
+            if engine.has_work:
+                engine.step()
+        except InjectedFault as e:
+            if e.fault.kind == "kill":
+                os._exit(EXIT_FAULT_KILL)  # a real crash: no cleanup
+            try:
+                send(("error", traceback.format_exc()))
+            except Exception:
+                pass
+            sys.exit(EXIT_STEP_ERROR)
+        except (EOFError, BrokenPipeError):  # parent died / closed
+            sys.exit(EXIT_PIPE_LOST)
+        except SystemExit:
+            raise
+        except BaseException:
+            # engine state after an arbitrary step error is not
+            # trustworthy — report and exit so the parent respawns a
+            # clean incarnation (the old loop kept serving on it)
+            try:
+                send(("error", traceback.format_exc()))
+            except (BrokenPipeError, OSError):
+                sys.exit(EXIT_PIPE_LOST)
+            sys.exit(EXIT_STEP_ERROR)

@@ -141,3 +141,69 @@ def test_parser_on_real_lowered_module():
     want = L * 2 * 8 * N * N
     assert cost.flops_per_chip == pytest.approx(want, rel=0.35), \
         (cost.flops_per_chip, want)
+
+
+# ---------------------------------------------------------------------------
+# donation parsing (repro.analysis's donation auditor builds on this)
+# ---------------------------------------------------------------------------
+def test_parse_donation_inline_typed_operands():
+    from repro.core.hlo_analysis import parse_donation
+    text = (
+        "module @jit_f {\n"
+        "  func.func public @main("
+        "%arg0: tensor<4x8xf32> {tf.aliasing_output = 0 : i32}, "
+        "%arg1: tensor<4x8xf32> {tf.aliasing_output = 1 : i32, "
+        "mhlo.layout_mode = \"default\"}, "
+        "%arg2: tensor<4xi32>) -> (tensor<4x8xf32>, tensor<4x8xf32>) {\n"
+        "    return %arg0, %arg1 : tensor<4x8xf32>, tensor<4x8xf32>\n"
+        "  }\n"
+        "}\n")
+    info = parse_donation(text)
+    assert info.aliased_outputs == (0, 1)
+    assert info.buffer_donors == 0
+    assert info.n_aliased == 2
+
+
+def test_parse_donation_tuple_results_no_markers():
+    from repro.core.hlo_analysis import parse_donation
+    text = (
+        "func.func public @main(%arg0: tensor<2xf32>) "
+        "-> (tensor<2xf32>, tensor<2xf32>) {\n"
+        "  return %arg0, %arg0 : tensor<2xf32>, tensor<2xf32>\n"
+        "}\n")
+    info = parse_donation(text)
+    assert info.aliased_outputs == ()
+    assert info.n_aliased == 0
+
+
+def test_parse_donation_multi_device_buffer_donor():
+    """Multi-device lowerings defer alias pairing to compile time and
+    mark donated args ``jax.buffer_donor = true`` instead of
+    ``tf.aliasing_output`` — both count as donated."""
+    from repro.core.hlo_analysis import parse_donation
+    text = (
+        "func.func public @main("
+        "%arg0: tensor<8x128xf32> {jax.buffer_donor = true, "
+        "mhlo.sharding = \"{devices=[2,1]<=[2]}\"}, "
+        "%arg1: tensor<8x128xf32> {tf.aliasing_output = 0 : i32}) "
+        "-> (tensor<8x128xf32>, tensor<8x128xf32>) {\n"
+        "  return %arg0, %arg1 : tensor<8x128xf32>, tensor<8x128xf32>\n"
+        "}\n")
+    info = parse_donation(text)
+    assert info.aliased_outputs == (0,)
+    assert info.buffer_donors == 1
+    assert info.n_aliased == 2
+
+
+def test_parse_donation_on_real_lowering():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hlo_analysis import parse_donation
+    buf = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    low = jax.jit(lambda b: b * 2.0, donate_argnums=0).lower(buf)
+    info = parse_donation(low.as_text())
+    assert info.n_aliased == 1
+
+    low = jax.jit(lambda b: b * 2.0).lower(buf)   # undonated
+    assert parse_donation(low.as_text()).n_aliased == 0

@@ -390,3 +390,115 @@ def test_prefix_sharing_covers_moe():
         == {r: t for r, (t, _) in off.items()}
     assert eng_on.prefix_hit_tokens_total \
         == SHARE_PREFIX_LEN * len(SHARE_PHASE2)
+
+
+# ---------------------------------------------------------------------------
+# page-axis indexing on 3-trailing-dim page groups (MLA latents, int8
+# scales). Regression: _copy_fn/gather_prefix derived the layer-stack
+# depth from the PAGE array's rank (ndim - 4) — right for attention
+# pages, off by one for MLA/scale groups, which turned the CoW page copy
+# into a silent no-op (OOB updates drop) and the gather into a read of
+# the wrong axis. The depth now comes from the table (always 2 trailing
+# dims), matching insert/_clear_fn.
+# ---------------------------------------------------------------------------
+def _mla_paged_backend():
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+    cfg = get_config("deepseek-v2-lite-16b-reduced")
+    model = Model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, EngineConfig(
+        n_slots=2, max_len=64, cache="paged", block_size=16))
+    return eng.cache_backend
+
+
+def _each_paged_group(tree):
+    from repro.serving.cache import is_paged_group
+    if isinstance(tree, dict) and is_paged_group(tree):
+        yield tree
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            yield from _each_paged_group(v)
+
+
+def test_paged_copy_reaches_mla_page_axis():
+    import jax.numpy as jnp
+    cb = _mla_paged_backend()
+    src, dst = 3, 5
+    tree = cb.tree
+    # seed page `src` on every pageable leaf; MLA page arrays stack as
+    # (L, P+1, bs, hd) so axis 1 is the physical page axis
+    def seed(t):
+        if isinstance(t, dict):
+            out = {}
+            for k, v in t.items():
+                if k.endswith("_pages") and "table" in t:
+                    out[k] = v.at[:, src].set(7.5)
+                else:
+                    out[k] = seed(v) if isinstance(v, dict) else v
+            return out
+        return t
+    tree = seed(tree)
+    copied = cb._copy_fn()(tree, jnp.int32(src), jnp.int32(dst))
+    groups = list(_each_paged_group(copied))
+    assert groups, "no paged groups found in the MLA tree"
+    for g in groups:
+        for k, v in g.items():
+            if not k.endswith("_pages"):
+                continue
+            pages = np.asarray(v)
+            assert (pages[:, dst] == 7.5).all(), \
+                f"{k}: CoW page copy did not reach page {dst}"
+            assert (pages[:, 0] == 0.0).all(), \
+                f"{k}: copy touched an unrelated page"
+
+
+def test_paged_gather_reads_mla_page_axis():
+    import jax.numpy as jnp
+    cb = _mla_paged_backend()
+    bs = cb.layout.block_size
+    page = 4
+    tree = cb.tree
+    def seed(t):
+        if isinstance(t, dict):
+            out = {}
+            for k, v in t.items():
+                if k.endswith("_pages") and "table" in t:
+                    # position j within the page carries value j+1
+                    ramp = jnp.arange(1, bs + 1, dtype=v.dtype)
+                    shape = [1] * v.ndim
+                    shape[2] = bs
+                    out[k] = v.at[:, page].set(
+                        ramp.reshape(shape)[:, 0])
+                else:
+                    out[k] = seed(v) if isinstance(v, dict) else v
+            return out
+        return t
+    tree = seed(tree)
+    table_rows = jnp.full((1, cb.tree_nblocks if hasattr(cb, "tree_nblocks")
+                           else 4), page, jnp.int32)
+    pos = jnp.arange(bs, dtype=jnp.int32)
+    gathered = cb._gather_fn()(tree, table_rows, pos)
+    leaves = [np.asarray(v) for g in _each_paged_group_out(gathered)
+              for v in g.values()]
+    assert leaves, "gather returned no page data"
+    for arr in leaves:
+        # every gathered position j must carry the seeded value j+1,
+        # regardless of trailing rank
+        flat = arr.reshape(arr.shape[:-1] + (-1,)) if arr.ndim else arr
+        expect = np.arange(1, bs + 1)
+        got = np.moveaxis(arr, 2, 0).reshape(bs, -1)
+        assert (got == expect[:, None]).all(), \
+            "gather read the wrong axis for a 3-trailing-dim page group"
+
+
+def _each_paged_group_out(tree):
+    """Gather output groups: dicts of arrays (no table)."""
+    if isinstance(tree, dict) and tree and all(
+            not isinstance(v, dict) for v in tree.values()):
+        yield tree
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            yield from _each_paged_group_out(v)
