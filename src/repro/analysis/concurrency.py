@@ -46,10 +46,11 @@ import pathlib
 
 from repro.analysis.report import Finding, line_suppressed
 
-_SERVING = pathlib.Path(__file__).resolve().parents[1] / "serving"
+_REPRO = pathlib.Path(__file__).resolve().parents[1]
 
-DEFAULT_TARGETS = ("backend.py", "router.py", "process_pool.py",
-                   "engine.py")
+DEFAULT_TARGETS = ("serving/backend.py", "serving/router.py",
+                   "serving/process_pool.py", "serving/engine.py",
+                   "workload/replay.py")
 
 MAIN = "main"
 
@@ -293,7 +294,7 @@ class _ClassAudit:
 
 def run(paths: tuple[pathlib.Path, ...] | None = None) -> list[Finding]:
     if paths is None:
-        paths = tuple(_SERVING / n for n in DEFAULT_TARGETS)
+        paths = tuple(_REPRO / n for n in DEFAULT_TARGETS)
     findings: list[Finding] = []
     for path in paths:
         src = path.read_text()

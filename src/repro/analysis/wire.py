@@ -51,7 +51,9 @@ PRE_AFFINITY_MODULES = (
 
 HEAVY = ("jax", "jaxlib")
 
-WIRE_DATACLASS_MODULES = ("repro.serving.events", "repro.serving.faults")
+WIRE_DATACLASS_MODULES = ("repro.serving.events", "repro.serving.faults",
+                          "repro.workload.traces", "repro.workload.slo",
+                          "repro.workload.replay")
 
 
 def _module_path(modname: str) -> pathlib.Path | None:

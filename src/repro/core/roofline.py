@@ -99,6 +99,23 @@ def prefill_flops(cfg: ArchConfig, n_tokens: int,
     return 2.0 * cfg.active_param_count() * max(n_tokens - hit_tokens, 0)
 
 
+def decode_step_seconds(cfg: ArchConfig, batch: int = 1, *,
+                        context_tokens: int = 0) -> float:
+    """Device seconds of ONE decode iteration (the roofline max of its
+    compute and memory terms): a batch-``batch`` step streams the
+    weights once and computes ``2·N_active·B`` FLOPs;
+    ``context_tokens`` adds the per-step KV-cache read. This is the
+    per-token quantum both ``decode_chunk_tokens`` (amortisation) and
+    the scheduler's SLO chunk cap (admission-latency bound) price."""
+    flops = 2.0 * cfg.active_param_count() * batch
+    bytes_ = 2.0 * cfg.param_count()          # bf16 weight stream per step
+    if context_tokens:
+        from repro.core.containers import kv_cache_bytes_per_token
+        bytes_ += batch * context_tokens * kv_cache_bytes_per_token(
+            cfg, max_len=context_tokens)
+    return max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+
+
 def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
                         overhead_s: float = DISPATCH_OVERHEAD_S,
                         overhead_frac: float = 0.1,
@@ -122,13 +139,7 @@ def decode_chunk_tokens(cfg: ArchConfig, batch: int = 1, *,
     at high concurrency that, not the weights, is what the chunk has to
     amortise the dispatch against.
     """
-    flops = 2.0 * cfg.active_param_count() * batch
-    bytes_ = 2.0 * cfg.param_count()          # bf16 weight stream per step
-    if context_tokens:
-        from repro.core.containers import kv_cache_bytes_per_token
-        bytes_ += batch * context_tokens * kv_cache_bytes_per_token(
-            cfg, max_len=context_tokens)
-    t_tok = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    t_tok = decode_step_seconds(cfg, batch, context_tokens=context_tokens)
     amortised = overhead_s * (1.0 - overhead_frac) / overhead_frac
     return max(1, min(max_chunk, math.ceil(amortised / max(t_tok, 1e-12))))
 

@@ -45,6 +45,9 @@ from repro.serving.backend import (ProcessBackend, SubmeshBackend,
                                    ThreadBackend)
 from repro.serving.pool import ContainerServingPool
 from repro.serving.process_pool import ProcessContainerPool
+from repro.workload.replay import replay
+from repro.workload.slo import SLOClass, SLOSpec
+from repro.workload.traces import PRESETS, load_or_synthesize
 
 
 def _engine_config(args) -> EngineConfig:
@@ -172,6 +175,27 @@ def main() -> None:
                     help="shed new requests while the recent "
                          "time-to-first-chunk p95 exceeds this "
                          "(seconds; default never)")
+    ap.add_argument("--trace", default=None,
+                    help="replay a workload trace open-loop instead of "
+                         "synthetic waves: a preset name "
+                         f"({', '.join(sorted(PRESETS))}) or a trace "
+                         "JSONL path")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="synthesis seed for a preset --trace")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="compress trace time (10 = a 600s trace "
+                         "replays in 60s; arrival pattern preserved, "
+                         "absolute rates scaled)")
+    ap.add_argument("--slo-ttfc-p95", type=float, default=None,
+                    help="single-class SLO: time-to-first-chunk p95 "
+                         "target in seconds; switches the scheduler to "
+                         "the energy_under_slo objective")
+    ap.add_argument("--priority-classes", default=None,
+                    help="multi-class SLO spec 'interactive:0.5,"
+                         "batch:4.0[:queue_frac]' — rank follows the "
+                         "listed order; implies energy_under_slo")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="max in-flight requests per tenant (SLO mode)")
     args = ap.parse_args()
     if args.isolation == "process" and args.submesh:
         ap.error("--submesh needs one process owning all devices; pick "
@@ -196,6 +220,20 @@ def main() -> None:
         units = 1 << (min(args.units, jax.device_count()).bit_length() - 1)
         print(f"submesh placement over {units} of {jax.device_count()} "
               f"devices")
+
+    # SLO vocabulary from the flags: a multi-class spec wins; a bare
+    # p95 target becomes a single-class spec. Either switches the
+    # scheduler objective to energy_under_slo (the Router derives the
+    # binding constraint from the spec itself).
+    slo = None
+    if args.priority_classes:
+        slo = SLOSpec.parse(args.priority_classes)
+    elif args.slo_ttfc_p95 is not None:
+        slo = SLOSpec((SLOClass(ttfc_p95_s=args.slo_ttfc_p95),))
+
+    if args.trace is not None:
+        _serve_trace(args, cfg, model, params, units, slo)
+        return
 
     def batch_of_requests(base):
         return [Request(rid=base + i,
@@ -260,15 +298,7 @@ def main() -> None:
         for wave in range(args.waves):
             _stream_requests(router, batch_of_requests(
                 wave * args.requests), args.print_chunks)
-        for w in router.history:
-            print(f"window {w.window}: n={w.n_containers} "
-                  f"wall {w.wall_s:.2f}s {w.tokens_per_s:.1f} tok/s "
-                  f"energy {w.energy_j:.1f}J "
-                  f"ttfc p50 {w.ttfc_p50_s:.3f}s p95 {w.ttfc_p95_s:.3f}s "
-                  f"lat p50 {w.latency_p50_s:.3f}s"
-                  + (f" retries {w.n_retries} failed {w.n_failed} "
-                     f"shed {w.n_shed}"
-                     if w.n_retries or w.n_failed or w.n_shed else ""))
+        _print_windows(router.history)
         print(f"feasible counts: {feasible}")
         print(f"converged choice: n={router.choice}")
         print("scheduler summary:", router.scheduler.summary())
@@ -293,6 +323,71 @@ def main() -> None:
     print(f"converged choice: n={apool.choice}")
     print("scheduler summary:", apool.scheduler.summary())
     apool.close()
+
+
+def _print_windows(history) -> None:
+    for w in history:
+        print(f"window {w.window}: n={w.n_containers} "
+              f"wall {w.wall_s:.2f}s {w.tokens_per_s:.1f} tok/s "
+              f"energy {w.energy_j:.1f}J "
+              f"ttfc p50 {w.ttfc_p50_s:.3f}s p95 {w.ttfc_p95_s:.3f}s "
+              f"lat p50 {w.latency_p50_s:.3f}s"
+              + (f" retries {w.n_retries} failed {w.n_failed} "
+                 f"shed {w.n_shed}"
+                 if w.n_retries or w.n_failed or w.n_shed else ""))
+        for name, cw in sorted(w.per_class.items()):
+            tgt = (f" target {cw.target_ttfc_p95_s:.3f}s "
+                   f"{'MET' if cw.attained else 'VIOLATED'}"
+                   if cw.attained is not None else "")
+            print(f"    [{name}] done {cw.n_done} shed {cw.n_shed} "
+                  f"failed {cw.n_failed} "
+                  f"ttfc p95 {cw.ttfc_p95_s:.3f}s{tgt}")
+
+
+def _serve_trace(args, cfg, model, params, units, slo) -> None:
+    """Open-loop trace replay through the live Router — the launcher
+    face of ``workload.replay``. Online (scheduler-resized) when
+    ``--containers 0``, fixed count otherwise."""
+    trace = load_or_synthesize(args.trace, seed=args.trace_seed)
+    objective = "energy_under_slo" if slo is not None else args.objective
+    router_kw = dict(**_router_fault_kw(args), slo=slo,
+                     tenant_quota=args.tenant_quota,
+                     window=args.requests, window_s=5.0)
+    if args.containers:
+        backend = _make_backend(args, cfg, model, params,
+                                args.containers, units)
+        router = Router(backend, **router_kw)
+    else:
+        engine_cfg = _engine_config(args)
+        kv_kw = ({"kv_blocks": engine_cfg.resolved_max_blocks,
+                  "block_size": engine_cfg.block_size,
+                  "prefix_cached_blocks": args.prefix_cached_blocks}
+                 if args.cache == "paged" else {})
+        feasible = feasible_counts(cfg, units, **kv_kw) or [1]
+        router = Router(
+            backend_factory=lambda n: _make_backend(args, cfg, model,
+                                                    params, n, units),
+            feasible_counts=feasible, objective=objective,
+            epsilon=0.1, **router_kw)
+    with router:
+        report = replay(trace, router, time_scale=args.time_scale,
+                        vocab_size=cfg.vocab_size)
+        _print_windows(router.history)
+    print(f"trace {report.trace} (seed {report.seed}, "
+          f"time_scale {report.time_scale:g}): "
+          f"{report.n_done}/{report.n_requests} done, "
+          f"{report.n_shed} shed, {report.n_failed} failed in "
+          f"{report.duration_s:.1f}s")
+    print(f"goodput {report.goodput_rps:.2f} rps  "
+          f"ttfc p95 {report.ttfc_p95_s:.3f}s  "
+          f"energy/done {report.energy_per_done_j:.2f}J  "
+          f"counts {list(report.counts_visited)} -> n={report.final_n}")
+    for name, cw in sorted(report.per_class.items()):
+        tgt = (f" target {cw.target_ttfc_p95_s:.3f}s "
+               f"{'MET' if cw.attained else 'VIOLATED'}"
+               if cw.attained is not None else "")
+        print(f"  [{name}] done {cw.n_done} shed {cw.n_shed} "
+              f"failed {cw.n_failed} ttfc p95 {cw.ttfc_p95_s:.3f}s{tgt}")
 
 
 def _print_wave(args, n, done, per, wall, energy, meshes, backend) -> None:

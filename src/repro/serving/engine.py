@@ -99,6 +99,11 @@ class Request:
     # a resource-freeing approximation and the Router's check is the
     # authoritative end-to-end one.
     deadline_s: float | None = None
+    # SLO class name and tenant id (serving/router.py + workload/slo.py):
+    # the Router's priority-ordered dispatch, per-class shed thresholds
+    # and per-tenant quotas key on these; the engine itself ignores both.
+    priority: str = "default"
+    tenant: str = ""
 
 
 @dataclasses.dataclass

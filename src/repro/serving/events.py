@@ -91,13 +91,18 @@ class FailedEvent:
 @dataclasses.dataclass(frozen=True)
 class RejectedEvent:
     """Terminal event: admission control shed this request instead of
-    queueing it (bounded queue full, or the ttfc tail over the shed
-    threshold). ``retry_after_s`` is the Router's backpressure hint."""
+    queueing it (bounded queue full, the ttfc tail over the shed
+    threshold, or a tenant over its quota). ``retry_after_s`` is the
+    Router's backpressure hint; ``kind`` ∈ {"queue", "slo", "tenant"}
+    names which threshold tripped and ``priority`` the SLO class it was
+    evaluated under — per-class shed accounting keys on these."""
     rid: int
     reason: str
     retry_after_s: float
     time_s: float
     container_id: int = -1        # never dispatched
+    kind: str = "queue"
+    priority: str = "default"
 
 
 @dataclasses.dataclass(frozen=True)

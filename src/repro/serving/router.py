@@ -52,12 +52,26 @@ Fault tolerance (see serving/events.py for the event taxonomy):
 (``RequestFailed`` / ``RequestRejected``, both RuntimeError) so code
 that only calls ``result()`` cannot mistake a failed request for a
 hung one.
+
+**SLO mode** (pass an ``workload.slo.SLOSpec``): requests carry a
+priority class and tenant; admission enters a rank-ordered router-side
+backlog instead of a container FIFO (``dispatch_depth`` bounds how deep
+each container's own queue may get, so ordering happens where ranks
+exist), shed thresholds and queue shares derive from each class
+(``queue_limit`` / ``shed_ttfc_threshold``), per-tenant in-flight
+quotas reject hogs with ``RejectedEvent(kind="tenant")``, and each
+window's ``WindowStats.per_class`` carries per-class tails + SLO
+attainment. The scheduler observation then includes the constraint
+class's ttfc p95 so ``energy_under_slo`` can pick the cheapest count
+whose predicted tail meets target. Without an SLOSpec every code path
+above is byte-identical to the pre-SLO router.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from collections import Counter, deque
+from collections import Counter, defaultdict, deque
 from typing import Any, Callable, Iterator, Sequence
 
 from repro.core.scheduler import DivideAndSaveScheduler
@@ -68,6 +82,8 @@ from repro.serving.events import (ChunkEvent, ContainerFailure, DoneEvent,
 from repro.serving.pool import (ContainerResult, EnergyProxy, _warn_wave_shim,
                                 assemble_wave, latency_percentiles,
                                 percentiles)
+from repro.workload.slo import (SLOSpec, censored_ttfc_p95, class_window,
+                                queue_limit, shed_ttfc_threshold)
 
 _IDLE_SLEEP_S = 0.002
 
@@ -116,6 +132,10 @@ class WindowStats:
     n_shed: int = 0               # admission rejections in the window
     prefix_hit_tokens: int = 0    # prompt tokens served from the prefix
                                   # cache instead of prefill (paged only)
+    # per-SLO-class slice of the window (name -> workload.slo.ClassWindow
+    # with tails + attainment); empty unless the Router runs with an
+    # SLOSpec
+    per_class: dict = dataclasses.field(default_factory=dict)
 
 
 class CompletionHandle:
@@ -135,6 +155,8 @@ class CompletionHandle:
         self.ttfc_s: float | None = None    # submit → first ChunkEvent
         self.container_id: int | None = None  # where dispatch placed it
         self.done_at: float | None = None   # DoneEvent arrival stamp
+        self.priority: str = "default"      # resolved SLO class name
+        self.tenant: str = ""
 
     @property
     def done(self) -> bool:
@@ -207,17 +229,25 @@ class Router:
                  epsilon: float = 0.0, seed: int = 0,
                  deadline_s: float | None = None,
                  window: int = 16,
+                 window_s: float | None = None,
                  energy: EnergyProxy | None = None,
                  max_retries: int = 1,
                  request_deadline_s: float | None = None,
                  deadline_grace_s: float = 0.5,
                  max_queue: int | None = None,
                  shed_p95_s: float | None = None,
-                 shed_window_s: float = 30.0):
+                 shed_window_s: float = 30.0,
+                 slo: SLOSpec | None = None,
+                 tenant_quota: int | None = None,
+                 dispatch_depth: int = 4):
         if backend is None and backend_factory is None:
             raise ValueError("need a backend or a backend_factory")
         self.energy = energy or EnergyProxy()
         self.window = window
+        # time-based window close (None = completion count only): sparse
+        # traffic then still produces scheduler observations instead of
+        # stalling adaptation below the count threshold forever
+        self.window_s = window_s
         self.scheduler = scheduler
         # fault-tolerance knobs: bounded re-dispatch after container
         # failures, a default per-request deadline (``deadline_s`` above
@@ -230,6 +260,14 @@ class Router:
         self.max_queue = max_queue
         self.shed_p95_s = shed_p95_s
         self.shed_window_s = shed_window_s
+        # SLO mode (workload/slo.py): priority-ordered dispatch through a
+        # router-side backlog (``dispatch_depth`` bounds backend-side
+        # queueing so ordering happens HERE, where ranks exist), shed
+        # thresholds derived per class, per-tenant in-flight quotas, and
+        # per-class window stats
+        self.slo = slo
+        self.tenant_quota = tenant_quota
+        self.dispatch_depth = dispatch_depth
         self._factory = backend_factory
         self._backends: dict[int, Any] = {}
         if backend_factory is not None:
@@ -238,9 +276,15 @@ class Router:
                     raise ValueError(
                         "adaptive mode needs feasible_counts (or an "
                         "explicit scheduler)")
+                slo_kw = ({"objective": "energy_under_slo",
+                           "slo_ttfc_p95_s": slo.constraint.ttfc_p95_s}
+                          if slo is not None
+                          and objective == "energy_under_slo"
+                          else {"objective": objective})
                 self.scheduler = DivideAndSaveScheduler(
-                    list(feasible_counts), objective=objective,
-                    deadline_s=deadline_s, epsilon=epsilon, seed=seed)
+                    list(feasible_counts),
+                    deadline_s=deadline_s, epsilon=epsilon, seed=seed,
+                    **slo_kw)
             n0 = self.scheduler.pick()
             backend = self._backend_for(n0)
         self.backend = backend
@@ -250,6 +294,13 @@ class Router:
         self._requests: dict[int, Request] = {}   # for re-dispatch
         self._submit_t: dict[int, float] = {}
         self._deadline_abs: dict[int, float] = {}  # router backstop clock
+        # priority backlog (SLO mode): (rank, submit seq, rid) heap of
+        # registered-but-undispatched requests; entries whose rid left
+        # ``_handles`` (terminal) or entered ``_rid_cid`` (placed) are
+        # skipped lazily
+        self._backlog: list[tuple[int, int, int]] = []
+        self._subseq = 0
+        self._tenants: Counter = Counter()      # in-flight per tenant
         # per-container multiset of in-flight admission buckets (the
         # bucket-aware half of dispatch)
         self._cid_buckets: list[Counter] = [Counter()
@@ -265,7 +316,15 @@ class Router:
         # than shed_window_s — a p95 frozen on a past spike would keep
         # shedding forever after the overload drains
         self._recent_ttfc: deque[tuple[float, float]] = deque(maxlen=64)
+        # per-class tail samples (SLO mode): each class sheds against its
+        # OWN recent p95, so one class's blown tail cannot shed another's
+        self._recent_ttfc_cls: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=64))
         self._target_n: int | None = None    # resize awaiting a drain
+        # SLO mode: the first window after a resize is a warm-up — its
+        # (loss-censored) tail describes the transition, not the new
+        # count — recorded in history but withheld from the scheduler
+        self._warmup_window = False
         self._new_window()
 
     # -- plumbing -------------------------------------------------------
@@ -284,6 +343,10 @@ class Router:
         self._window_retries = 0
         self._window_failed = 0
         self._window_shed = 0
+        # per-SLO-class accumulators (only filled in scheduler mode, like
+        # _window_done — a fixed router must stay O(1) per request)
+        self._window_cls: dict[str, dict] = defaultdict(
+            lambda: {"ttfc": [], "lat": [], "shed": 0, "failed": 0})
 
     @property
     def in_flight(self) -> int:
@@ -294,19 +357,31 @@ class Router:
         return self.backend.capacity
 
     # -- admission ------------------------------------------------------
-    def _dispatch(self, req: Request) -> int | None:
-        """Pick a container: least-loaded, ties toward a bucket hit.
-        Only containers the backend reports ``alive`` are candidates
-        (discovered with getattr — structural test backends without a
-        supervision surface count as all-alive); None if every container
-        is dead/respawning."""
+    def _alive_cids(self) -> list[int]:
+        """Containers the backend reports ``alive`` (discovered with
+        getattr — structural test backends without a supervision surface
+        count as all-alive)."""
         alive = getattr(self.backend, "alive", None)
-        cids = [cid for cid in range(self.backend.capacity)
+        return [cid for cid in range(self.backend.capacity)
                 if alive is None or alive(cid)]
+
+    def _dispatch(self, req: Request,
+                  max_load: int | None = None) -> int | None:
+        """Pick a container: least-loaded, ties toward a bucket hit.
+        None if every container is dead/respawning — or, with
+        ``max_load`` (the SLO backlog's bounded-depth dispatch), if
+        every live container already holds that many requests: the
+        request then stays in the priority backlog instead of burying
+        rank order inside a container's FIFO."""
+        cids = self._alive_cids()
         if not cids:
             return None
-        bucket = _bucket(len(req.prompt))
         load = self.backend.load
+        if max_load is not None:
+            cids = [cid for cid in cids if load(cid) < max_load]
+            if not cids:
+                return None
+        bucket = _bucket(len(req.prompt))
 
         def key(cid: int):
             return (load(cid),
@@ -316,30 +391,64 @@ class Router:
         self._cid_buckets[cid][bucket] += 1
         return cid
 
-    def note_ttfc(self, seconds: float, at: float | None = None) -> None:
+    def note_ttfc(self, seconds: float, at: float | None = None,
+                  priority: str = "default") -> None:
         """Record one time-to-first-chunk sample for the shed-threshold
         p95 (stamped now unless ``at`` is given — tests inject history
         through here rather than poking the deque's tuple layout)."""
-        self._recent_ttfc.append(
-            (time.perf_counter() if at is None else at, seconds))
+        stamp = time.perf_counter() if at is None else at
+        self._recent_ttfc.append((stamp, seconds))
+        if self.slo is not None:
+            self._recent_ttfc_cls[priority].append((stamp, seconds))
 
-    def _shed_reason(self) -> str | None:
-        if (self.max_queue is not None
-                and len(self._handles) >= self.max_queue):
-            return (f"queue full: {len(self._handles)} in flight >= "
-                    f"max_queue={self.max_queue}")
-        if self.shed_p95_s is not None:
-            # age out stale samples FIRST: a ttfc spike must stop
-            # tripping the threshold once it leaves the window, or one
-            # past burst sheds traffic forever after recovery
+    @staticmethod
+    def _aged_p95(samples: deque, horizon: float) -> float | None:
+        """p95 over a (stamp, value) deque after aging out entries older
+        than ``horizon``: a ttfc spike must stop tripping the threshold
+        once it leaves the window, or one past burst sheds traffic
+        forever after recovery. None below 8 samples (too noisy)."""
+        while samples and samples[0][0] < horizon:
+            samples.popleft()
+        if len(samples) < 8:
+            return None
+        _, p95 = percentiles([v for _, v in samples])
+        return p95
+
+    def _shed_reason(self, req: Request,
+                     cls=None) -> tuple[str, str] | None:
+        """(kind, reason) when admission should shed ``req``, else None.
+        kind ∈ {"tenant", "queue", "slo"} — with an SLO class the queue
+        bound and the ttfc threshold are the *class's* (lower-rank
+        classes get a smaller queue slice and their own tail sample), so
+        batch overload cannot starve interactive admission."""
+        if (self.tenant_quota is not None and req.tenant
+                and self._tenants[req.tenant] >= self.tenant_quota):
+            return ("tenant",
+                    f"tenant {req.tenant!r} at quota: "
+                    f"{self._tenants[req.tenant]} in flight >= "
+                    f"tenant_quota={self.tenant_quota}")
+        if self.max_queue is not None:
+            limit = (queue_limit(cls, self.max_queue)
+                     if cls is not None else self.max_queue)
+            if len(self._handles) >= limit:
+                extra = (f" (class {cls.name!r} share of "
+                         f"max_queue={self.max_queue})" if cls is not None
+                         and limit != self.max_queue else "")
+                return ("queue",
+                        f"queue full: {len(self._handles)} in flight >= "
+                        f"{limit}{extra}")
+        threshold = (shed_ttfc_threshold(cls, self.shed_p95_s)
+                     if cls is not None else self.shed_p95_s)
+        if threshold is not None:
             horizon = time.perf_counter() - self.shed_window_s
-            while self._recent_ttfc and self._recent_ttfc[0][0] < horizon:
-                self._recent_ttfc.popleft()
-            if len(self._recent_ttfc) >= 8:
-                _, p95 = percentiles([v for _, v in self._recent_ttfc])
-                if p95 > self.shed_p95_s:
-                    return (f"ttfc p95 {p95:.3f}s over shed threshold "
-                            f"{self.shed_p95_s:g}s")
+            samples = (self._recent_ttfc_cls[cls.name]
+                       if cls is not None else self._recent_ttfc)
+            p95 = self._aged_p95(samples, horizon)
+            if p95 is not None and p95 > threshold:
+                scope = (f"class {cls.name!r} " if cls is not None else "")
+                return ("slo",
+                        f"{scope}ttfc p95 {p95:.3f}s over shed threshold "
+                        f"{threshold:g}s")
         return None
 
     def _retry_after_hint(self) -> float:
@@ -362,39 +471,92 @@ class Router:
         """Admit one request now; returns immediately with a handle whose
         ``stream()`` yields the request's events. Under overload the
         handle may come back already shed (its stream yields one
-        ``RejectedEvent`` and raises ``RequestRejected``)."""
+        ``RejectedEvent`` and raises ``RequestRejected``). With an
+        ``SLOSpec`` the request enters a rank-ordered backlog instead of
+        going straight to a container queue: dispatch happens in
+        priority order as containers free up below ``dispatch_depth``."""
         if self._closed:
             raise RuntimeError("router is closed")
         if req.rid in self._handles:
             raise ValueError(f"request id {req.rid} is already in flight")
         now = time.perf_counter()
-        shed = self._shed_reason()
+        cls = self.slo.cls(req.priority) if self.slo is not None else None
+        shed = self._shed_reason(req, cls)
         if shed is not None:
+            kind, reason = shed
             self.shed_total += 1
             self._window_shed += 1
+            pri = cls.name if cls is not None else "default"
+            if self.scheduler is not None and self.slo is not None:
+                self._window_cls[pri]["shed"] += 1
             return self._terminal_handle(req, RejectedEvent(
-                req.rid, shed, self._retry_after_hint(), now))
+                req.rid, reason, self._retry_after_hint(), now,
+                kind=kind, priority=pri))
         if req.deadline_s is None and self.request_deadline_s is not None:
             req = dataclasses.replace(
                 req, deadline_s=self.request_deadline_s)
-        cid = self._dispatch(req)
-        if cid is None:
-            self.failed_total += 1
-            self._window_failed += 1
-            return self._terminal_handle(req, FailedEvent(
-                req.rid, -1, "container",
-                "no healthy container to dispatch to "
-                "(all circuit-broken or respawning)", now))
         handle = CompletionHandle(req.rid, self)
-        handle.container_id = cid
+        if cls is not None:
+            handle.priority = cls.name
+            handle.tenant = req.tenant
+        if self.slo is None:
+            # non-SLO path: dispatch immediately (unchanged behaviour)
+            cid = self._dispatch(req)
+            if cid is None:
+                self.failed_total += 1
+                self._window_failed += 1
+                return self._terminal_handle(req, FailedEvent(
+                    req.rid, -1, "container",
+                    "no healthy container to dispatch to "
+                    "(all circuit-broken or respawning)", now))
+            handle.container_id = cid
+            self._rid_cid[req.rid] = cid
         self._handles[req.rid] = handle
-        self._rid_cid[req.rid] = cid
         self._requests[req.rid] = req
         self._submit_t[req.rid] = now
         if req.deadline_s is not None:
             self._deadline_abs[req.rid] = now + req.deadline_s
-        self.backend.submit(cid, req)
+        if self.slo is None:
+            self.backend.submit(handle.container_id, req)
+        else:
+            if req.tenant:
+                self._tenants[req.tenant] += 1
+            heapq.heappush(self._backlog,
+                           (cls.rank, self._subseq, req.rid))
+            self._subseq += 1
+            self._drain_backlog()
         return handle
+
+    def _drain_backlog(self) -> None:
+        """Dispatch backlog entries in (rank, arrival) order while a
+        live container has load below ``dispatch_depth``. Entries whose
+        rid already left ``_handles`` (terminal: deadline backstop,
+        cancel) or entered ``_rid_cid`` (already placed) are lazy-
+        deleted. Stops at the first undispatchable entry — skipping
+        past it would invert priority order."""
+        while self._backlog:
+            rank, seq, rid = self._backlog[0]
+            handle = self._handles.get(rid)
+            if handle is None or rid in self._rid_cid:
+                heapq.heappop(self._backlog)
+                continue
+            req = self._requests[rid]
+            cid = self._dispatch(req, max_load=self.dispatch_depth)
+            if cid is None:
+                if not self._alive_cids():
+                    # nothing to ever dispatch to: fail rather than
+                    # strand the backlog behind dead containers
+                    heapq.heappop(self._backlog)
+                    self._fail_request(
+                        rid, "container",
+                        "no healthy container to dispatch to "
+                        "(all circuit-broken or respawning)")
+                    continue
+                break                  # all live containers at depth
+            heapq.heappop(self._backlog)
+            handle.container_id = cid
+            self._rid_cid[rid] = cid
+            self.backend.submit(cid, req)
 
     # -- event pump -----------------------------------------------------
     def _pump(self, block: bool = False) -> list[Event]:
@@ -424,7 +586,8 @@ class Router:
             handle._pending.append(ev)
             if isinstance(ev, ChunkEvent) and handle.ttfc_s is None:
                 handle.ttfc_s = now - self._submit_t[ev.rid]
-                self.note_ttfc(handle.ttfc_s, at=now)
+                self.note_ttfc(handle.ttfc_s, at=now,
+                               priority=handle.priority)
             elif isinstance(ev, DoneEvent):
                 self._on_done(handle, ev)
             elif isinstance(ev, FailedEvent):
@@ -435,7 +598,12 @@ class Router:
                 handle.failure = ev
                 self.failed_total += 1
                 self._window_failed += 1
+                if self.scheduler is not None and self.slo is not None:
+                    self._window_cls[handle.priority]["failed"] += 1
         self._expire_deadlines(now)
+        if self.slo is not None:
+            # completions freed container slots; pull the backlog forward
+            self._drain_backlog()
         if self.scheduler is not None:
             self._maybe_rotate_window()
         if block and not events:
@@ -449,12 +617,18 @@ class Router:
 
     def _forget(self, rid: int) -> None:
         """Release every router-side record of ``rid`` (the handle's
-        terminal state is the caller's to set)."""
+        terminal state is the caller's to set). Backlog entries are
+        lazy-deleted (``_drain_backlog`` skips rids no longer in
+        ``_handles``)."""
         cid = self._rid_cid.pop(rid, None)
         req = self._requests.pop(rid, None)
         if cid is not None and req is not None:
             self._cid_buckets[cid][_bucket(len(req.prompt))] -= 1
-        self._handles.pop(rid, None)
+        handle = self._handles.pop(rid, None)
+        if handle is not None and handle.tenant:
+            self._tenants[handle.tenant] -= 1
+            if self._tenants[handle.tenant] <= 0:
+                del self._tenants[handle.tenant]
         self._submit_t.pop(rid, None)
         self._deadline_abs.pop(rid, None)
 
@@ -472,6 +646,8 @@ class Router:
         handle._pending.append(ev)
         self.failed_total += 1
         self._window_failed += 1
+        if self.scheduler is not None and self.slo is not None:
+            self._window_cls[handle.priority]["failed"] += 1
 
     def _expire_deadlines(self, now: float) -> None:
         """Authoritative deadline backstop: the engine expires deadlines
@@ -564,6 +740,7 @@ class Router:
         comp = ev.completion
         handle.completion = comp
         handle.done_at = time.perf_counter()
+        submit_t = self._submit_t.get(handle.rid)
         self._forget(handle.rid)
         if self.scheduler is not None:
             # window accumulators only exist to feed the scheduler; a
@@ -572,6 +749,12 @@ class Router:
             self._window_done.append(comp)
             if handle.ttfc_s is not None:
                 self._window_ttfc.append(handle.ttfc_s)
+            if self.slo is not None:
+                acc = self._window_cls[handle.priority]
+                if handle.ttfc_s is not None:
+                    acc["ttfc"].append(handle.ttfc_s)
+                if submit_t is not None:
+                    acc["lat"].append(handle.done_at - submit_t)
 
     def cancel(self, rid: int, reason: str = "cancelled by caller") -> bool:
         """Cancel an in-flight request: backend-side removal (slot and
@@ -598,13 +781,24 @@ class Router:
     # -- windowed adaptation -------------------------------------------
     def _maybe_rotate_window(self) -> None:
         """Sliding-window adaptation, split in two so continuous traffic
-        still adapts: the *stats window* closes on completion count
-        (observe + re-pick every ``window`` completions, even with
-        requests in flight), while the *backend swap* waits for the
-        stream to drain — resizing under a live request would strand its
-        slot."""
+        still adapts: the *stats window* closes on completion count — or,
+        with ``window_s``, on elapsed wall time, so sparse traffic still
+        produces scheduler observations instead of stalling adaptation
+        below the count threshold forever — while the *backend swap*
+        waits for the stream to drain (resizing under a live request
+        would strand its slot). A time-expired window with zero
+        completions just restarts its clock: observing it would feed the
+        scheduler an all-idle sample with no latency content."""
+        time_up = (self.window_s is not None
+                   and time.perf_counter() - self._window_t0
+                   >= self.window_s)
         if len(self._window_done) >= self.window:
             self._observe_window()
+        elif time_up:
+            if self._window_done:
+                self._observe_window()
+            else:
+                self._new_window()       # idle window: restart the clock
         if self._target_n is None or self._handles:
             return
         if self._target_n != self.backend.capacity \
@@ -616,6 +810,15 @@ class Router:
             self.backend = self._backend_for(self._target_n)
             self._cid_buckets = [Counter()
                                  for _ in range(self.backend.capacity)]
+            # shed-threshold tails described the OUTGOING backend; kept
+            # across the resize they would shed (and loss-censor) the new
+            # count's first windows and brand it infeasible forever
+            self._recent_ttfc.clear()
+            self._recent_ttfc_cls.clear()
+            # SLO mode only: mean observations average a transition
+            # away, but one loss-censored tail sample from the swap
+            # window can brand the incoming count infeasible
+            self._warmup_window = self.slo is not None
             self._new_window()
         self._target_n = None
 
@@ -630,15 +833,51 @@ class Router:
                        for b in busy)
         ttfc50, ttfc95 = percentiles(self._window_ttfc)
         lat50, lat95 = latency_percentiles(self._window_done)
+        per_class: dict = {}
+        if self.slo is not None:
+            per_class = {
+                name: class_window(self.slo.cls(name), name,
+                                   acc["ttfc"], acc["lat"],
+                                   acc["shed"], acc["failed"])
+                for name, acc in sorted(self._window_cls.items())}
         self.history.append(WindowStats(
             len(self.history), n, wall, energy_j, len(self._window_done),
             toks, toks / wall if wall > 0 else 0.0, ttfc50, ttfc95,
             lat50, lat95, n_retries=self._window_retries,
             n_failed=self._window_failed, n_shed=self._window_shed,
             prefix_hit_tokens=sum(getattr(c, "prefix_hit_tokens", 0)
-                                  for c in self._window_done)))
+                                  for c in self._window_done),
+            per_class=per_class))
         assert self.scheduler is not None
-        self.scheduler.observe(n, wall, energy_j)
+        if self._warmup_window:
+            # transition window (see __init__): keep the stats, withhold
+            # the scheduler observation and keep the current pick
+            self._warmup_window = False
+            self._new_window()
+            return
+        done = len(self._window_done)
+        scale = 1.0
+        if self.window_s is not None and 0 < done < self.window:
+            # time-closed short window: normalise wall/energy to the
+            # canonical window size so observations stay comparable
+            # across sparse and busy windows (per-request cost is the
+            # quantity the convex fit models)
+            scale = self.window / done
+        # the scheduler's tail sample is the CONSTRAINT class's p95 (the
+        # tightest target — that is what energy_under_slo guards),
+        # shed-censored: admission pins the admitted p95 at the shed
+        # threshold, so shed arrivals must count as violations or every
+        # count looks feasible. Overall window p95 when no SLO is set
+        q95: float | None = ttfc95 if self._window_ttfc else None
+        if self.slo is not None:
+            cname = self.slo.constraint.name
+            acc = self._window_cls.get(cname)
+            if acc is not None:
+                q95 = censored_ttfc_p95(
+                    acc["ttfc"], acc["shed"] + acc["failed"],
+                    2.0 * self.slo.constraint.ttfc_p95_s)
+        self.scheduler.observe(n, wall * scale, energy_j * scale,
+                               ttfc_p95_s=q95)
         if repick:
             self._target_n = self.scheduler.pick()
         self._new_window()

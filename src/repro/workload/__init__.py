@@ -1,0 +1,14 @@
+"""Trace-driven workload subsystem: seeded arrival-process + length
+generators (``traces``), SLO class vocabulary and the shared admission
+arithmetic (``slo``), an open-loop replayer over the live Router
+(``replay``) and its deterministic virtual-time twin (``sim``)."""
+from repro.workload.slo import ClassWindow, SLOClass, SLOSpec
+from repro.workload.traces import (PRESETS, Trace, TraceRequest, TraceSpec,
+                                   get_preset, load_or_synthesize,
+                                   synthesize)
+
+__all__ = [
+    "ClassWindow", "SLOClass", "SLOSpec",
+    "PRESETS", "Trace", "TraceRequest", "TraceSpec",
+    "get_preset", "load_or_synthesize", "synthesize",
+]

@@ -1,0 +1,258 @@
+"""Router SLO mode: priority-ordered dispatch, per-class admission,
+tenant quotas, time-based window close.
+
+These are the request-level guarantees the workload subsystem's claims
+stand on: rank order survives overload (a batch flood cannot starve
+interactive), every shed is a *typed* rejection naming its mechanism
+(``kind`` ∈ queue/slo/tenant), and sparse traffic still produces
+scheduler observations because windows close on ``window_s`` as well as
+on completion count. All on a scripted in-memory backend — no model,
+no jax, deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import ChunkEvent, DoneEvent, Request, Router
+from repro.serving.engine import Completion
+from repro.serving.events import RejectedEvent
+from repro.workload.slo import SLOSpec
+
+SLO = SLOSpec.parse("interactive:0.5,batch:4.0")
+
+
+def _req(rid, priority="default", tenant="", max_new=2):
+    return Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                   max_new_tokens=max_new, priority=priority,
+                   tenant=tenant)
+
+
+class StallBackend:
+    """In-memory ContainerBackend whose requests complete only when the
+    test calls ``release()`` — lets a test hold a backlog open and watch
+    the dispatch order."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._inflight: list[list] = [[] for _ in range(capacity)]
+        self._stats = [(0.0, 0)] * capacity
+        self.dispatch_order: list[int] = []   # rids, in submit order
+        self._released = False
+        self.closed = False
+
+    def submit(self, cid, req):
+        self.dispatch_order.append(req.rid)
+        self._inflight[cid].append(req)
+
+    def submit_many(self, cid, reqs):
+        for r in reqs:
+            self.submit(cid, r)
+
+    def release(self):
+        self._released = True
+
+    def poll(self):
+        if not self._released:
+            return []
+        out = []
+        now = time.perf_counter()
+        for cid, flight in enumerate(self._inflight):
+            for req in flight:
+                toks = tuple(range(req.max_new_tokens))
+                busy, ntok = self._stats[cid]
+                self._stats[cid] = (busy + 1e-4, ntok + len(toks))
+                out.append(ChunkEvent(req.rid, cid, toks, now))
+                out.append(DoneEvent(req.rid, cid,
+                                     Completion(req.rid, list(toks),
+                                                len(req.prompt), 1e-4),
+                                     now))
+            self._inflight[cid] = []
+        return out
+
+    def load(self, cid):
+        return len(self._inflight[cid])
+
+    def stats(self, cid):
+        return self._stats[cid]
+
+    def drain(self, concurrent=True):
+        return []
+
+    def close(self):
+        self.closed = True
+
+
+# ---------------------------------------------------------------------------
+# priority-ordered dispatch
+# ---------------------------------------------------------------------------
+def test_backlog_dispatches_interactive_before_batch():
+    """With one container at dispatch_depth=1, everything past the
+    first request queues ROUTER-side — and leaves in rank order, not
+    arrival order."""
+    backend = StallBackend(1)
+    with Router(backend, slo=SLO, dispatch_depth=1) as router:
+        router.submit(_req(0, "batch"))          # occupies the container
+        router.submit(_req(1, "batch"))          # backlog, rank 1
+        router.submit(_req(2, "interactive"))    # backlog, rank 0
+        router.submit(_req(3, "interactive"))    # backlog, rank 0
+        assert backend.dispatch_order == [0]     # depth bound held
+        backend.release()
+        router.drain()
+    # interactive overtook the earlier-arrived batch request
+    assert backend.dispatch_order == [0, 2, 3, 1]
+
+
+def test_fifo_within_a_class():
+    backend = StallBackend(1)
+    with Router(backend, slo=SLO, dispatch_depth=1) as router:
+        for rid in range(4):
+            router.submit(_req(rid, "interactive"))
+        backend.release()
+        router.drain()
+    assert backend.dispatch_order == [0, 1, 2, 3]
+
+
+def test_unknown_priority_maps_to_worst_class():
+    backend = StallBackend(1)
+    with Router(backend, slo=SLO, dispatch_depth=1) as router:
+        router.submit(_req(0, "batch"))
+        router.submit(_req(1, "mystery"))        # -> batch rank
+        h = router.submit(_req(2, "interactive"))
+        assert h.priority == "interactive"
+        backend.release()
+        router.drain()
+    assert backend.dispatch_order == [0, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# typed sheds: queue share, slo threshold, tenant quota
+# ---------------------------------------------------------------------------
+def test_class_queue_share_sheds_lower_class_first():
+    """max_queue=4 with batch at queue_frac 0.5: two in flight shut the
+    door on batch while interactive still gets the full queue."""
+    backend = StallBackend(1)
+    with Router(backend, slo=SLO, dispatch_depth=1,
+                max_queue=4) as router:
+        router.submit(_req(0, "interactive"))
+        router.submit(_req(1, "interactive"))
+        shed = router.submit(_req(2, "batch"))
+        kept = router.submit(_req(3, "interactive"))
+        assert isinstance(shed.failure, RejectedEvent)
+        assert shed.failure.kind == "queue"
+        assert shed.failure.priority == "batch"
+        assert kept.failure is None
+        backend.release()
+        router.drain()
+
+
+def test_slo_shed_uses_per_class_tail():
+    """A blown interactive tail sheds interactive (kind='slo') without
+    touching batch admission — the threshold and the samples are the
+    class's own."""
+    backend = StallBackend(2)
+    with Router(backend, slo=SLO, dispatch_depth=4) as router:
+        now = time.perf_counter()
+        for _ in range(10):   # >= 8 samples, over 2.0*0.5s threshold
+            router.note_ttfc(1.7, at=now, priority="interactive")
+        shed = router.submit(_req(0, "interactive"))
+        kept = router.submit(_req(1, "batch"))
+        assert isinstance(shed.failure, RejectedEvent)
+        assert shed.failure.kind == "slo"
+        assert shed.failure.priority == "interactive"
+        assert kept.failure is None
+        backend.release()
+        router.drain()
+
+
+def test_tenant_quota_rejects_hog_frees_on_completion():
+    backend = StallBackend(2)
+    with Router(backend, slo=SLO, dispatch_depth=4,
+                tenant_quota=2) as router:
+        router.submit(_req(0, "interactive", tenant="hog"))
+        router.submit(_req(1, "interactive", tenant="hog"))
+        third = router.submit(_req(2, "interactive", tenant="hog"))
+        other = router.submit(_req(3, "interactive", tenant="meek"))
+        assert isinstance(third.failure, RejectedEvent)
+        assert third.failure.kind == "tenant"
+        assert other.failure is None
+        backend.release()
+        router.drain()
+        # quota freed by completion: the tenant may submit again
+        retry = router.submit(_req(4, "interactive", tenant="hog"))
+        assert retry.failure is None
+        backend.release()
+        router.drain()
+
+
+def test_non_slo_rejections_unchanged():
+    """Byte-compat: without an SLOSpec the old admission surface is
+    untouched — plain max_queue sheds with kind='queue'."""
+    backend = StallBackend(1)
+    with Router(backend, max_queue=1) as router:
+        router.submit(_req(0))
+        shed = router.submit(_req(1))
+        assert isinstance(shed.failure, RejectedEvent)
+        assert shed.failure.kind == "queue"
+        assert shed.failure.priority == "default"
+        backend.release()
+        router.drain()
+
+
+# ---------------------------------------------------------------------------
+# time-based window close (sparse traffic) + per-class window stats
+# ---------------------------------------------------------------------------
+def test_window_s_closes_sparse_window():
+    """A trace sparser than ``window`` completions must still feed the
+    scheduler: the window closes on wall time instead of starving
+    adaptation forever."""
+    built = []
+
+    def factory(n):
+        b = StallBackend(n)
+        b.release()          # complete immediately in this test
+        built.append(b)
+        return b
+
+    router = Router(backend_factory=factory, feasible_counts=[1],
+                    window=1000, window_s=0.05, epsilon=0.0)
+    for rid in range(3):
+        h = router.submit(_req(rid))
+        while not h.done:
+            router.poll()
+    deadline = time.perf_counter() + 2.0
+    while not router.history and time.perf_counter() < deadline:
+        time.sleep(0.01)
+        router.poll()        # rotation happens inside the pump
+    router.close()
+    assert router.history, "window_s never closed a sparse window"
+    w = router.history[0]
+    assert 0 < w.n_requests <= 3
+    assert router.scheduler.n_observations >= 1
+
+
+def test_per_class_window_stats_and_attainment():
+    def factory(n):
+        b = StallBackend(n)
+        b.release()
+        return b
+
+    router = Router(backend_factory=factory, feasible_counts=[1],
+                    window=4, epsilon=0.0, slo=SLO)
+    rids = iter(range(100))
+    for _ in range(2):       # two full windows
+        handles = [router.submit(_req(next(rids), pri))
+                   for pri in ("interactive", "interactive",
+                               "batch", "batch")]
+        while not all(h.done for h in handles):
+            router.poll()
+    router.close()
+    assert router.history
+    w = router.history[0]
+    assert set(w.per_class) == {"interactive", "batch"}
+    cw = w.per_class["interactive"]
+    assert cw.n_done == 2
+    assert cw.target_ttfc_p95_s == pytest.approx(0.5)
+    assert cw.attained is True   # scripted backend answers instantly

@@ -1,0 +1,237 @@
+"""Trace-driven workload subsystem: generators, SLO arithmetic, the
+virtual-time simulator.
+
+The contracts under test: (a) synthesis is a pure function of
+(spec, seed) — same inputs, bit-identical trace; (b) a trace survives
+the JSONL round-trip exactly; (c) arrival processes have the rates
+their specs claim; (d) the loss-censored quantile and the shed/queue
+threshold helpers are the single source of admission arithmetic; and
+(e) ``simulate`` — the twin the committed BENCH_trace numbers come
+from — is deterministic bit-for-bit and responds to capacity the way a
+queue must (more containers, shorter tails, on an overloaded trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+
+import pytest
+
+from repro.workload.replay import assemble_report, build_request
+from repro.workload.sim import FleetModel, simulate
+from repro.workload.slo import (SHED_HEADROOM, SLOClass, SLOSpec,
+                                censored_ttfc_p95, queue_limit,
+                                shed_ttfc_threshold)
+from repro.workload.traces import (PRESETS, get_preset, load_jsonl,
+                                   load_or_synthesize, save_jsonl,
+                                   synthesize)
+
+
+# ---------------------------------------------------------------------------
+# trace synthesis
+# ---------------------------------------------------------------------------
+def test_same_seed_identical_trace():
+    spec = get_preset("diurnal-bursty")
+    a, b = synthesize(spec, seed=7), synthesize(spec, seed=7)
+    assert a == b
+    assert a.requests == b.requests
+
+
+def test_different_seed_different_trace():
+    spec = get_preset("diurnal-bursty")
+    assert synthesize(spec, seed=1) != synthesize(spec, seed=2)
+
+
+def test_arrivals_sorted_within_duration():
+    for name, spec in PRESETS.items():
+        tr = synthesize(spec, seed=3)
+        times = [r.arrival_s for r in tr.requests]
+        assert times == sorted(times), name
+        assert all(0.0 <= t <= spec.duration_s for t in times), name
+        assert all(r.prompt_len >= 1 and r.max_new_tokens >= 1
+                   for r in tr.requests), name
+
+
+def test_poisson_rate_matches_spec():
+    spec = dataclasses.replace(
+        get_preset("poisson-light"), duration_s=2000.0, max_requests=10_000)
+    tr = synthesize(spec, seed=0)
+    rate = len(tr.requests) / spec.duration_s
+    assert rate == pytest.approx(spec.arrival.rate_rps, rel=0.1)
+
+
+def test_priority_mix_matches_weights():
+    spec = dataclasses.replace(get_preset("diurnal-bursty"),
+                               duration_s=2000.0, max_requests=10_000)
+    tr = synthesize(spec, seed=5)
+    share = (sum(1 for r in tr.requests if r.priority == "interactive")
+             / len(tr.requests))
+    assert share == pytest.approx(0.7, abs=0.05)
+
+
+def test_jsonl_roundtrip_exact(tmp_path):
+    tr = synthesize(get_preset("bursty"), seed=11)
+    path = tmp_path / "trace.jsonl"
+    save_jsonl(tr, path)
+    assert load_jsonl(path) == tr
+    assert load_or_synthesize(str(path)) == tr
+
+
+def test_load_or_synthesize_rejects_unknown():
+    with pytest.raises(ValueError, match="neither a preset"):
+        load_or_synthesize("no-such-preset-or-file")
+
+
+def test_trace_picklable():
+    tr = synthesize(get_preset("poisson-light"), seed=0)
+    assert pickle.loads(pickle.dumps(tr)) == tr
+
+
+def test_build_request_regenerates_prompt():
+    tr = synthesize(get_preset("poisson-light"), seed=0)
+    r1 = build_request(tr.requests[0], vocab_size=256)
+    r2 = build_request(tr.requests[0], vocab_size=256)
+    assert (r1.prompt == r2.prompt).all()
+    assert len(r1.prompt) == tr.requests[0].prompt_len
+    assert r1.priority == tr.requests[0].priority
+
+
+# ---------------------------------------------------------------------------
+# SLO vocabulary + admission arithmetic
+# ---------------------------------------------------------------------------
+def test_slospec_parse_ranks_and_fracs():
+    spec = SLOSpec.parse("interactive:0.5,batch:4.0")
+    assert spec.names() == ("interactive", "batch")
+    inter, batch = spec.classes
+    assert inter.rank == 0 and batch.rank == 1
+    assert inter.queue_frac == 1.0 and batch.queue_frac == 0.5
+    assert spec.constraint is inter
+    # unknown priorities map to the WORST class, never the best
+    assert spec.cls("mystery") is batch
+
+
+def test_slospec_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        SLOSpec.parse("")
+    with pytest.raises(ValueError):
+        SLOSpec.parse("a:1:2:3")
+    with pytest.raises(ValueError):
+        SLOClass(name="x", ttfc_p95_s=-1.0)
+    with pytest.raises(ValueError):
+        SLOSpec(classes=(SLOClass(name="a"), SLOClass(name="a")))
+
+
+def test_queue_limit_scales_and_floors():
+    cls = SLOClass(name="batch", queue_frac=0.25)
+    assert queue_limit(cls, 64) == 16
+    assert queue_limit(cls, 2) == 1          # never statically locked out
+    assert queue_limit(cls, None) is None
+
+
+def test_shed_threshold_headroom_and_override():
+    cls = SLOClass(name="i", ttfc_p95_s=0.5)
+    assert shed_ttfc_threshold(cls, None) == SHED_HEADROOM * 0.5
+    assert shed_ttfc_threshold(cls, 2.5) == 2.5
+
+
+def test_censored_p95_counts_losses_as_violations():
+    clean = [0.1] * 100
+    assert censored_ttfc_p95(clean, 0, cap_s=1.0) == pytest.approx(0.1)
+    # 10 lost out of 110: the 95th percentile falls in the censored mass
+    assert censored_ttfc_p95(clean, 10, cap_s=1.0) == 1.0
+    # 2 lost out of 102 (< 5%): still the observed value
+    assert censored_ttfc_p95(clean, 2, cap_s=1.0) == pytest.approx(0.1)
+    assert censored_ttfc_p95([], 0, cap_s=1.0) is None
+    assert censored_ttfc_p95([], 5, cap_s=1.0) == 1.0
+
+
+def test_assemble_report_goodput_counts_only_met_targets():
+    tr = synthesize(get_preset("poisson-light"), seed=0)
+    slo = SLOSpec.parse("interactive:0.5,batch:4.0")
+    done = [("interactive", 0.2, 1.0),    # met
+            ("interactive", 0.9, 1.5),    # blew its target — not goodput
+            ("batch", 3.0, 5.0)]          # met
+    rep = assemble_report(tr, slo=slo, done=done, shed=["batch"],
+                          failed=["interactive"], duration_s=10.0,
+                          energy_j=50.0)
+    assert rep.goodput_rps == pytest.approx(2 / 10.0)
+    assert rep.n_done == 3 and rep.n_shed == 1 and rep.n_failed == 1
+    assert rep.energy_per_done_j == pytest.approx(50.0 / 3)
+    assert rep.per_class["interactive"].attained is False
+    assert rep.per_class["batch"].attained is True
+    assert rep.slo_attained is False
+    assert pickle.loads(pickle.dumps(rep)) == rep
+
+
+# ---------------------------------------------------------------------------
+# the virtual-time simulator
+# ---------------------------------------------------------------------------
+SIM_KW = dict(window=16, window_s=10.0, max_queue=64, epsilon=0.05)
+
+
+def _short_trace(seed=1):
+    return synthesize(dataclasses.replace(get_preset("diurnal-bursty"),
+                                          duration_s=300.0), seed=seed)
+
+
+def test_simulate_deterministic_bit_for_bit():
+    tr = _short_trace()
+    slo = SLOSpec.parse("interactive:0.5,batch:8.0")
+    kw = dict(feasible_counts=[1, 2, 3], objective="energy_under_slo",
+              slo=slo, seed=4, **SIM_KW)
+    a, b = simulate(tr, **kw), simulate(tr, **kw)
+    assert a == b
+
+
+def test_simulate_completes_everything_unloaded():
+    tr = synthesize(get_preset("poisson-light"), seed=0)
+    rep = simulate(tr, feasible_counts=[2], **SIM_KW)
+    assert rep.n_done == rep.n_requests
+    assert rep.n_shed == 0 and rep.n_failed == 0
+    assert rep.final_n == 2 and rep.counts_visited == (2,)
+
+
+def test_more_containers_shorter_tail_under_overload():
+    """The paper's capacity story through the queue: on a bursty trace a
+    1-container fleet queues, a 4-container fleet doesn't."""
+    tr = _short_trace()
+    one = simulate(tr, feasible_counts=[1], **SIM_KW)
+    four = simulate(tr, feasible_counts=[4], **SIM_KW)
+    assert four.ttfc_p95_s < one.ttfc_p95_s
+    assert four.n_done >= one.n_done
+
+
+def test_simulate_deadline_failures_accounted():
+    tr = _short_trace()
+    strict = simulate(tr, feasible_counts=[1],
+                      deadline_by_class={"interactive": 0.3,
+                                         "batch": 0.3, "default": 0.3},
+                      **SIM_KW)
+    assert strict.n_failed > 0
+    assert (strict.n_done + strict.n_shed + strict.n_failed
+            == strict.n_requests)
+
+
+def test_fleet_model_shapes():
+    fleet = FleetModel()
+    # splitting recovers parallelism: aggregate throughput rises with n
+    agg = [n * fleet.rate(n) for n in (1, 2, 4)]
+    assert agg == sorted(agg)
+    # static power rises with provisioned count, busy adds dynamic power
+    assert fleet.power_w(2, 0) > fleet.power_w(1, 0)
+    assert fleet.power_w(2, 2) > fleet.power_w(2, 1) > fleet.power_w(2, 0)
+
+
+def test_slo_run_prefers_attainment_over_mean_energy():
+    """The headline mechanism, miniaturised: under the frozen fleet the
+    mean-energy run and the SLO run may pick different counts, and the
+    SLO run must attain its targets."""
+    tr = synthesize(dataclasses.replace(get_preset("diurnal-bursty"),
+                                        duration_s=900.0), seed=1)
+    slo = SLOSpec.parse("interactive:0.5,batch:8.0")
+    dl = {"interactive": 1.2, "batch": 30.0, "default": 30.0}
+    kw = dict(feasible_counts=[1, 2, 3, 4], seed=0,
+              deadline_by_class=dl, **SIM_KW)
+    cons = simulate(tr, objective="energy_under_slo", slo=slo, **kw)
+    assert cons.slo_attained
+    assert cons.per_class["interactive"].ttfc_p95_s <= 0.5

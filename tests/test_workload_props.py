@@ -1,0 +1,112 @@
+"""Property-based contracts for the workload generators and the SLO
+arithmetic (hypothesis; the module is skipped on hosts without it —
+see conftest.pytest_ignore_collect).
+
+The generators promise: determinism in (spec, seed), sorted in-range
+arrivals, positive lengths, an exact JSONL round-trip for ANY spec the
+validators accept. The censored quantile promises: bounded by the cap,
+monotone in the loss count, and exactly the order statistic when
+nothing was lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.workload.slo import SLOClass, SLOSpec, censored_ttfc_p95
+from repro.workload.traces import (ArrivalSpec, LengthSpec, TraceSpec,
+                                   load_jsonl, save_jsonl, synthesize)
+
+arrival_specs = st.builds(
+    ArrivalSpec,
+    kind=st.sampled_from(["poisson", "diurnal", "bursty",
+                          "diurnal_bursty"]),
+    rate_rps=st.floats(0.2, 20.0),
+    period_s=st.floats(10.0, 300.0),
+    depth=st.floats(0.0, 0.95),
+    burst_rate_rps=st.floats(1.0, 40.0),
+    calm_dwell_s=st.floats(1.0, 60.0),
+    burst_dwell_s=st.floats(0.5, 30.0),
+)
+
+trace_specs = st.builds(
+    TraceSpec,
+    name=st.just("prop"),
+    duration_s=st.floats(5.0, 60.0),
+    arrival=arrival_specs,
+    lengths=st.builds(
+        LengthSpec,
+        prompt_median=st.floats(4.0, 64.0),
+        prompt_sigma=st.floats(0.1, 1.0),
+    ),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=trace_specs, seed=st.integers(0, 2**31 - 1))
+def test_synthesis_deterministic_and_well_formed(spec, seed):
+    a = synthesize(spec, seed=seed)
+    b = synthesize(spec, seed=seed)
+    assert a == b
+    times = [r.arrival_s for r in a.requests]
+    assert times == sorted(times)
+    assert all(0.0 <= t <= spec.duration_s for t in times)
+    assert all(r.prompt_len >= 1 and r.max_new_tokens >= 1
+               for r in a.requests)
+    assert [r.rid for r in a.requests] == list(range(len(a.requests)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=trace_specs, seed=st.integers(0, 2**31 - 1))
+def test_jsonl_roundtrip_any_spec(spec, seed, tmp_path_factory):
+    tr = synthesize(spec, seed=seed)
+    path = tmp_path_factory.mktemp("traces") / "t.jsonl"
+    save_jsonl(tr, path)
+    assert load_jsonl(path) == tr
+
+
+@settings(max_examples=100, deadline=None)
+@given(ttfc=st.lists(st.floats(0.0, 10.0, allow_nan=False), max_size=200),
+       n_lost=st.integers(0, 200),
+       cap=st.floats(0.1, 100.0))
+def test_censored_p95_bounded_and_monotone(ttfc, n_lost, cap):
+    q = censored_ttfc_p95(ttfc, n_lost, cap_s=cap)
+    if not ttfc and n_lost == 0:
+        assert q is None
+        return
+    assert q is not None
+    if ttfc:
+        assert min(ttfc) <= q <= max(max(ttfc), cap)
+    else:
+        assert q == cap
+    # censoring more arrivals can never LOWER the reported tail
+    q_more = censored_ttfc_p95(ttfc, n_lost + 10, cap_s=cap)
+    if q <= cap:
+        assert q_more >= q or math.isclose(q_more, q)
+
+
+@settings(max_examples=100, deadline=None)
+@given(ttfc=st.lists(st.floats(0.0, 10.0, allow_nan=False),
+                     min_size=1, max_size=200))
+def test_censored_p95_is_order_statistic_without_losses(ttfc):
+    q = censored_ttfc_p95(ttfc, 0, cap_s=1e9)
+    s = sorted(ttfc)
+    k = max(0, math.ceil(0.95 * len(s)) - 1)
+    assert q == s[k]
+
+
+@settings(max_examples=50, deadline=None)
+@given(targets=st.lists(st.floats(0.01, 50.0), min_size=1, max_size=5,
+                        unique=True))
+def test_slospec_constraint_is_tightest(targets):
+    spec = SLOSpec(tuple(
+        SLOClass(name=f"c{i}", ttfc_p95_s=t, rank=i,
+                 queue_frac=1.0 / (2 ** i))
+        for i, t in enumerate(targets)))
+    assert spec.constraint.ttfc_p95_s == min(targets)
+    # any unknown name lands on the highest rank
+    worst = spec.cls("not-a-class")
+    assert worst.rank == len(targets) - 1
